@@ -1,0 +1,44 @@
+"""Assignment roofline table: per (arch x shape x mesh) terms from the
+dry-run artifacts (launch/dryrun.py --all --out ...)."""
+import json
+import os
+
+DEFAULT_PATHS = ["results/dryrun_sp.json", "results/dryrun_mp.json",
+                 "/tmp/dryrun_sp.json", "/tmp/dryrun_mp.json"]
+
+
+def load(paths=None):
+    rows = []
+    candidates = paths or DEFAULT_PATHS
+    # prefer results/ artifacts; fall back to /tmp (no duplicates)
+    chosen = [p for p in candidates[:2] if os.path.exists(p)] or \
+             [p for p in candidates[2:] if os.path.exists(p)]
+    for p in chosen:
+        rows.extend(json.load(open(p)))
+    return rows
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("roofline/no_dryrun_artifacts_found,0,run launch.dryrun first")
+        return
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r.get("skipped"):
+            print(f"roofline/{r['arch']}/{r['shape']}/-,0,skipped:{r.get('reason','')[:40]}")
+            continue
+        if r.get("error"):
+            print(f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh','?')},0,ERROR")
+            continue
+        step_us = max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},{step_us:.0f},"
+              f"tc={r['t_compute']*1e3:.1f}ms;tm={r['t_memory']*1e3:.1f}ms;"
+              f"tx={r['t_collective']*1e3:.1f}ms;bn={r['bottleneck']};"
+              f"useful={r['useful_ratio']:.3f};"
+              f"roofline={r['roofline_fraction']:.3f};"
+              f"mem_gib={r['memory_per_device']/2**30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

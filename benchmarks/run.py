@@ -1,0 +1,67 @@
+"""Benchmark harness — one function per paper table (+ the assignment's
+roofline table).  Prints ``name,us_per_call,derived`` CSV.
+
+Tables (torchgpipe paper):
+  Table 1  component ablation        -> ablation_components
+  Table 2  AmoebaNet-D speed (m, n)  -> amoebanet_speed
+  Table 3  U-Net max model vs n      -> unet_memory
+  Table 4  U-Net speed vs n          -> unet_speed
+Assignment:
+  roofline per (arch x shape x mesh) -> roofline_table (reads dry-run JSON)
+
+Wall-clock numbers run real multi-device pipelines on XLA host devices in
+subprocesses (reduced model sizes — CPU is the runtime, TPU the target);
+memory/collective numbers come from compiled artifacts.  ``--fast`` trims
+the grids.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids (default: full paper grids)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: ablation,amoebanet,"
+                         "unet_memory,unet_speed,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (ablation_components, amoebanet_speed,
+                            roofline_table, unet_memory, unet_speed)
+
+    def want(name):
+        return only is None or name in only
+
+    if want("ablation"):
+        print("# Table 1: optimization components (U-Net, n=4, m=8)")
+        _safe(ablation_components.main)
+    if want("amoebanet"):
+        print("# Table 2: AmoebaNet-D speed benchmark (m x n)")
+        grid = ((1, 2), (4, 2), (4, 4), (4, 8)) if args.fast else None
+        _safe(lambda: amoebanet_speed.main(grid=grid))
+    if want("unet_memory"):
+        print("# Table 3: U-Net memory benchmark")
+        ns = (1, 2) if args.fast else (1, 2, 4)
+        _safe(lambda: unet_memory.main(ns=ns))
+    if want("unet_speed"):
+        print("# Table 4: U-Net speed benchmark")
+        cols = unet_speed.COLUMNS[:3] if args.fast else unet_speed.COLUMNS
+        _safe(lambda: unet_speed.main(columns=cols))
+    if want("roofline"):
+        print("# Assignment: roofline table (from dry-run artifacts)")
+        _safe(roofline_table.main)
+
+
+def _safe(fn):
+    try:
+        fn()
+    except Exception:
+        traceback.print_exc()
+        print("bench_failed,0,see_traceback", file=sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: GPipe micro-batch pipeline parallelism in ~40 lines.
+
+Builds a small llama-style LM, wraps it in the pipeline transform, and
+trains a few steps on synthetic data.  On this CPU container the mesh is
+1 device (the same code drives the 512-chip production mesh — see
+repro/launch/dryrun.py).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import mesh as mesh_lib, steps
+from repro.models.lm import LMModel
+from repro.optim import optimizers as optim
+
+
+def main():
+    arch = configs.smoke_arch("smollm-360m")   # reduced dims, same family
+    pcfg = configs.smoke_parallel("smollm-360m")
+    mesh = mesh_lib.make_smoke_mesh(pcfg)
+    model = LMModel(arch, pcfg, dtype=jnp.float32)
+    shape = ShapeConfig("train", seq_len=32, global_batch=8, kind="train")
+
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = optim.OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=30)
+    opt = optim.init(ocfg, params)
+    data = SyntheticLM(DataConfig(vocab=arch.vocab, seq_len=32,
+                                  global_batch=8))
+
+    with jax.set_mesh(mesh):
+        train_step = jax.jit(
+            steps.build_train_step(model, pcfg, mesh, shape, ocfg))
+        for i in range(10):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            params, opt, metrics = train_step(params, opt, batch)
+            print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run JSON artifacts."""
+import json
+import sys
+
+
+def table(path, mesh_label):
+    rows = json.load(open(path))
+    out = []
+    out.append(f"\n#### Mesh {mesh_label}\n")
+    out.append("| arch | shape | layout | m | compile | mem/dev | t_comp | "
+               "t_mem | t_coll | bottleneck | MODEL/HLO | roofline |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"— | — | skipped (full attention @500k) | — | — |")
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | | | |")
+            continue
+        p = r["pcfg"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | p{p['pipe']}×t{p['tp']} | "
+            f"{p['n_micro']} | {r['compile_s']}s | "
+            f"{r['memory_per_device']/2**30:.1f}G | "
+            f"{r['t_compute']*1e3:.0f}ms | {r['t_memory']*1e3:.0f}ms | "
+            f"{r['t_collective']*1e3:.0f}ms | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.3f} | **{r['roofline_fraction']:.3f}** |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table("results/dryrun_sp.json", "16×16 (single pod, 256 chips)"))
+    print(table("results/dryrun_mp.json", "2×16×16 (multi-pod, 512 chips)"))

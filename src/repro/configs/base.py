@@ -1,0 +1,214 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`; every
+assigned input shape as a :class:`ShapeConfig`; and the distribution layout
+(how the production mesh's ``model`` axis factors into ``pipe × tp``, how many
+micro-batches the GPipe schedule uses, which remat policy applies, ...) as a
+:class:`ParallelConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Attention / MoE / SSM sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    kind: str = "full"            # "full" | "swa" (sliding window) | "none"
+    window: int = 0               # sliding-window size when kind == "swa"
+    causal: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True         # whisper uses learned abs. positions instead
+    # hymba-style mixed layouts: indices of layers that use *full* attention
+    # while the rest use SWA (empty = uniform `kind`).
+    global_layers: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM head-group (used by rwkv6/hymba families)."""
+    state_dim: int = 16
+    n_heads: int = 0              # 0 = derive from d_model / head_dim
+    head_dim: int = 64
+    conv_dim: int = 4
+
+
+# ---------------------------------------------------------------------------
+# Architecture
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm | conv
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    act: str = "silu"             # silu (SwiGLU) | geglu | gelu
+    norm: str = "rms"             # rms | ln
+    tie_embeddings: bool = False
+    # encoder-decoder extras (whisper): ``n_layers`` counts *decoder* layers.
+    enc_layers: int = 0
+    enc_len: int = 0              # fixed encoder sequence length (audio frames)
+    # modality frontend stub: number of patch/frame embeddings prepended
+    frontend: str = "none"        # none | audio_stub | vision_stub
+    param_dtype: str = "bfloat16"
+    # documentation pointer (public source tier)
+    source: str = ""
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "encdec"
+
+    def layer_params(self) -> int:
+        """Approximate per-block parameter count (for balance / MODEL_FLOPS)."""
+        d, f = self.d_model, self.d_ff
+        n = 0
+        if self.attn is not None and self.attn.kind != "none":
+            a = self.attn
+            n += d * a.n_heads * a.head_dim * 2              # q, o
+            n += d * a.n_kv_heads * a.head_dim * 2           # k, v
+        if self.moe is not None:
+            n += self.moe.n_experts * 3 * d * f              # gate/up/down per expert
+            n += d * self.moe.n_experts                      # router
+        elif self.family in ("ssm",):
+            # rwkv6: time-mix (r,k,v,w,g,o ~ 6 d^2 at head granularity) + channel-mix
+            n += 6 * d * d + 2 * d * f
+        elif self.family == "hybrid":
+            n += 3 * d * d                                   # ssm in/out/dt projections
+            n += 3 * d * f
+        else:
+            mults = 3 if self.act in ("silu", "geglu") else 2
+            n += mults * d * f
+        return n
+
+    def total_params(self) -> int:
+        n = (self.n_layers + self.enc_layers) * self.layer_params()
+        n += self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return n
+
+    def active_params_per_token(self) -> int:
+        """For MoE: params touched per token (6*N_active*D convention)."""
+        per_block = self.layer_params()
+        if self.moe is not None:
+            dense = per_block - self.moe.n_experts * 3 * self.d_model * self.d_ff
+            active = dense + self.moe.top_k * 3 * self.d_model * self.d_ff
+            per_block = active
+        n = (self.n_layers + self.enc_layers) * per_block
+        n += self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Parallel / schedule config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How the production mesh maps onto this architecture.
+
+    The assignment's production grid is ``(data=16, model=16)`` per pod; the
+    ``model`` axis factors into ``pipe × tp`` (``pipe * tp == 16``).
+    """
+    pipe: int = 16
+    tp: int = 1
+    data: int = 16
+    pod: int = 1
+    n_micro: int = 8
+    microbatch: int = 0           # 0 = derive from global_batch
+    dp2: int = 1                  # surplus model-axis folded into extra DP
+    schedule: str = "gpipe"       # gpipe | 1f1b | seq
+    remat: str = "full"           # none | full | dots
+    remat_layers: bool = False    # nested checkpointing: remat each layer
+    #   inside the stage as well, so a backward tick stashes only bf16
+    #   layer-boundary activations instead of every layer's fp32 internals
+    #   (the memory lever for deep stages, e.g. llama3's 32 layers/stage).
+    gather_weights_once: bool = False  # pre-gather FSDP stage weights per
+    #   step (ZeRO-1-style comm) instead of re-gathering every clock tick
+    #   (ZeRO-3).  Trades +unsharded-stage-weights memory for ~T x fewer
+    #   all-gather bytes; the dominant lever for collective-bound cells.
+    remat_last_micro: bool = False  # paper §2.1: skip F'_{m,j} (unrolled only)
+    unroll_ticks: bool = False
+    overlap: bool = True          # async send-before-compute (paper C3 analogue)
+    portals: bool = True          # paper C4
+    stream_inputs: bool = False   # beyond-paper: shard µbatches over pipe + rotate
+    fsdp: bool = True             # ZeRO-3 over the data axis
+    grad_compression: str = "none"  # none | int8_ef (cross-pod)
+    activation_dtype: str = "bfloat16"
+
+    def with_(self, **kw) -> "ParallelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def model_axis(self) -> int:
+        return self.pipe * self.tp * self.dp2
+
+
+# ---------------------------------------------------------------------------
+# Roofline hardware constants (TPU v5e per assignment)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareConstants:
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    ici_bw: float = 50e9                 # bytes/s per link
+    hbm_bytes: float = 16 * 1024 ** 3    # v5e HBM capacity
+
+
+V5E = HardwareConstants()
+
+
+# ---------------------------------------------------------------------------
+# A full experiment cell = arch × shape × parallel
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch.name}/{self.shape.name}"

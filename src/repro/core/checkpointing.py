@@ -1,0 +1,60 @@
+"""Per-micro-batch gradient checkpointing (paper §3.2.4) as remat policies.
+
+torchgpipe implements checkpointing as a pair of autograd functions
+(``Checkpoint``/``Recompute``) sharing memory so that the recomputation
+``F'_{i,j}`` can be scheduled concurrently with the copy of ``dx_i^j``.  Under
+XLA the same task decomposition is produced by wrapping each per-tick stage
+application in :func:`jax.checkpoint`: autodiff then emits the rematerialized
+forward immediately before the stage backward, and XLA's async
+``collective-permute-start/done`` pairs overlap the recompute with the
+gradient copy — the shared-memory trick is what the compiler does natively.
+
+Policies:
+  * ``none`` — no remat: the scan stashes whatever XLA keeps (baseline).
+  * ``full`` — the paper's setting: store only the stage boundary input,
+    recompute everything in backward.
+  * ``dots`` — store matmul outputs only (jax checkpoint_dots) — beyond-paper
+    middle ground.
+  * ``dots_no_batch`` — checkpoint_dots_with_no_batch_dims (cheaper saves).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+POLICIES = ("none", "full", "dots", "dots_no_batch")
+
+
+def wrap_stage(stage_fn: Callable, policy: str) -> Callable:
+    """Wrap a per-tick stage application according to the remat policy."""
+    if policy == "none":
+        return stage_fn
+    if policy == "full":
+        return jax.checkpoint(stage_fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            stage_fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            stage_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {policy!r}; want one of {POLICIES}")
+
+
+def wrap_stage_for_micro(stage_fn: Callable, policy: str, *, micro: int,
+                         n_micro: int, remat_last_micro: bool) -> Callable:
+    """Per-micro-batch wrap used by the *unrolled* schedule.
+
+    Implements the paper's §2.1 optimization: the recompute of each stage's
+    last micro-batch ``F'_{m,j}`` saves no memory (it is the stage's final
+    forward, its activations can be kept) and only slows the pipeline, so it
+    is elided — unless ``remat_last_micro`` forces it (the paper does so for
+    the m=1 speed-benchmark comparison, footnote 5).
+    """
+    if policy == "none":
+        return stage_fn
+    if micro == n_micro - 1 and not remat_last_micro:
+        return stage_fn
+    return wrap_stage(stage_fn, policy)

@@ -1,0 +1,373 @@
+"""GPipe micro-batch pipeline parallelism as a JAX transform (paper §2–3).
+
+The pipeline runs inside a :func:`jax.shard_map` that is *manual* over the
+``pipe`` mesh axis and *auto* (GSPMD) over every other axis (``pod``,
+``data``, ``tp``): stage ``j``'s parameters live on pipe-rank ``j`` (the
+leading axis of the stacked stage parameters is sharded over ``pipe``), while
+FSDP/TP/DP sharding inside a stage is delegated to the compiler via
+``with_sharding_constraint`` — the paper's "device j holds partition j"
+placement, generalized to a 512-chip mesh.
+
+The deterministic clock-cycle (paper Algorithm 1) is a loop over ticks
+``t = 0 .. m+n-2``; at tick ``t``, pipe-rank ``j`` executes task
+``F_{t-j, j}`` (ranks whose ``t - j`` falls outside ``[0, m)`` are in the
+fill/drain bubble and compute on zeros; their results are masked out of the
+collected outputs, so autodiff assigns them exactly zero cotangent and the
+bubble contributes nothing to gradients).  Boundary activations move with a
+single-step ``collective-permute`` ring shift; skip tensors move via portals
+(:mod:`repro.core.skip`).  ``jax.grad`` through the loop yields the reverse
+clock-cycle with rematerialization scheduled immediately before each stage
+backward — the paper's fork/join + Checkpoint/Recompute pairing, obtained
+structurally (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.core import checkpointing
+from repro.core.skip import SkipSpec, portal_sends, ring_init, ring_push, ring_read
+
+PIPE_AXIS = "pipe"
+
+
+@dataclass
+class TickCtx:
+    """Per-tick context handed to the stage function."""
+    stage: jax.Array          # axis_index('pipe') — traced
+    micro: jax.Array          # clamped micro-batch index  t - stage
+    valid: jax.Array          # bool: is (micro, stage) a real task this tick?
+    t: Any                    # tick counter (traced in scan mode, int if unrolled)
+    fresh: Any                # stage-0 input pytree slice for this tick
+    n_stages: int
+    n_micro: int
+
+
+# StageApplyFn signature:
+#   stage_apply(stage_params, carry, skips_in: dict, resident, ctx: TickCtx)
+#       -> (carry_out, skips_out: dict, resident_out)
+StageApplyFn = Callable[..., Tuple[Any, Dict[str, Any], Any]]
+
+
+def _select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _shift_chain(value, n: int, axis: str):
+    """Main pipeline hop: rank j -> j+1 (rank 0 receives zeros)."""
+    if n == 1:
+        return jax.tree.map(jnp.zeros_like, value)
+    perm = [(i, i + 1) for i in range(n - 1)]
+    return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
+
+
+BATCH_AXES = ("pod", "data")
+
+
+def _constrain_batch0(tree, *, lead: int = 0):
+    """Constrain pytree leaves: batch dim = ``lead`` over (pod, data).
+
+    GSPMD does not reliably propagate the data sharding of the mini-batch
+    into the clock-loop carries (state, outputs, per-tick slices) that start
+    from jnp.zeros — without these constraints every carry is replicated
+    over the data axis and per-device memory blows up by |data|x.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not set(BATCH_AXES) <= set(mesh.axis_names):
+        return tree
+
+    nshard = 1
+    for ax in BATCH_AXES:
+        nshard *= mesh.shape[ax]
+
+    def one(a):
+        if a.ndim <= lead or a.shape[lead] % nshard:
+            return a
+        spec = [None] * a.ndim
+        spec[lead] = BATCH_AXES
+        return jax.lax.with_sharding_constraint(a, P(*spec))
+    return jax.tree.map(one, tree)
+
+
+def _barrier(*trees):
+    """Ablation hook (overlap=False): serialize comm against compute, the
+    analogue of torchgpipe's default-stream (no copy-stream) baseline."""
+    flat, tds = zip(*[jax.tree_util.tree_flatten(t) for t in trees])
+    leaves = [l for f in flat for l in f]
+    if not leaves:
+        return trees
+    out = jax.lax.optimization_barrier(tuple(leaves))
+    res, k = [], 0
+    for f, td in zip(flat, tds):
+        res.append(jax.tree_util.tree_unflatten(td, out[k:k + len(f)]))
+        k += len(f)
+    return tuple(res)
+
+
+# ---------------------------------------------------------------------------
+# The clock-cycle loop (runs INSIDE shard_map, manual over 'pipe')
+# ---------------------------------------------------------------------------
+
+def run_pipeline(stage_apply: StageApplyFn,
+                 stage_params,
+                 inputs_mb,
+                 cfg: ParallelConfig,
+                 *,
+                 skips: Sequence[SkipSpec] = (),
+                 skip_protos: Optional[Dict[str, Any]] = None,
+                 resident=None,
+                 carry_proto=None,
+                 axis: str = PIPE_AXIS):
+    """Execute the GPipe schedule for one mini-batch.
+
+    Args:
+      stage_apply: per-stage function, see StageApplyFn.
+      stage_params: this rank's stage parameters (already squeezed).
+      inputs_mb: pytree with leading micro-batch axis [m, ...] (replicated
+        over pipe; only rank 0 consumes it as ``ctx.fresh``).
+      cfg: ParallelConfig (n_micro, pipe, remat, portals, overlap, ...).
+      skips: skip edges (portal or threaded per cfg.portals).
+      skip_protos: {name: pytree of ShapeDtypeStruct} for ring/slot init.
+      resident: rank-local pytree (KV caches / SSM state), updated only on
+        valid ticks.
+      carry_proto: pytree of ShapeDtypeStruct describing the stage-boundary
+        carry. Defaults to the structure of one fresh input slice.
+
+    Returns: (outputs [m, ...carry], resident) — outputs valid on last rank.
+    """
+    n, m = cfg.pipe, cfg.n_micro
+    T = m + n - 1
+    # pipe == 1 runs outside shard_map (see pipeline_call): no axis to index.
+    idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
+    skip_protos = skip_protos or {}
+    resident = {} if resident is None else resident
+
+    def zeros_of(proto):
+        return jax.tree.map(
+            lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
+
+    if carry_proto is None:
+        carry0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype), inputs_mb)
+    else:
+        carry0 = zeros_of(carry_proto)
+    outputs0 = jax.tree.map(lambda c: jnp.zeros((m,) + c.shape, c.dtype), carry0)
+
+    if cfg.portals:
+        comms0 = {s.name: ring_init(s, skip_protos[s.name]) for s in skips}
+    else:
+        comms0 = {s.name: zeros_of(skip_protos[s.name]) for s in skips}
+
+    inputs_mb = _constrain_batch0(inputs_mb, lead=1)
+    streaming = cfg.stream_inputs and n > 1
+    k = m // n if streaming else 0   # micro-batches per rank (validated in
+    #                                  pipeline_call: m % n == 0)
+
+    def tick_body(state, comms, outputs, resident, t, stream_buf=None):
+        state = _constrain_batch0(state)
+        outputs = _constrain_batch0(outputs, lead=1)
+        if streaming:
+            # stream_buf slot s holds micro-batch s*n + ((t + rank) mod n):
+            # after t one-hop rotations, rank 0's slot t//n is micro-batch t.
+            fresh = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.clip(t // n, 0, k - 1), 0, keepdims=False),
+                stream_buf)
+        else:
+            fresh = _constrain_batch0(jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.minimum(t, m - 1), 0, keepdims=False), inputs_mb))
+        micro_raw = t - idx
+        valid = jnp.logical_and(micro_raw >= 0, micro_raw < m)
+        micro = jnp.clip(micro_raw, 0, m - 1)
+        ctx = TickCtx(stage=idx, micro=micro, valid=valid, t=t, fresh=fresh,
+                      n_stages=n, n_micro=m)
+
+        # --- skip consumption --------------------------------------------
+        skips_in = {}
+        for s in skips:
+            if cfg.portals:
+                rd = None
+                for dst in s.dsts:
+                    v = ring_read(s, dst, comms[s.name][dst])
+                    rd = v if rd is None else _select(idx == dst, v, rd)
+                skips_in[s.name] = rd
+            else:
+                skips_in[s.name] = comms[s.name]
+
+        # --- compute -------------------------------------------------------
+        fn = checkpointing.wrap_stage(
+            lambda p, c, si, r: stage_apply(p, c, si, r, ctx), cfg.remat)
+        carry_out, skips_out, resident_new = fn(stage_params, state, skips_in,
+                                                resident)
+        # bubble ticks must not mutate resident state (KV caches etc.)
+        resident = _select(valid, resident_new, resident)
+
+        # --- sends -----------------------------------------------------------
+        if not cfg.overlap:
+            (carry_out,), = (_barrier(carry_out),)
+        carry_out = _constrain_batch0(carry_out)
+        state_next = _shift_chain(carry_out, n, axis)
+        comms_next = {}
+        for s in skips:
+            v = skips_out[s.name]
+            if cfg.portals:
+                recvs = portal_sends(s, v, axis)
+                comms_next[s.name] = {
+                    dst: ring_push(comms[s.name][dst], recvs[dst])
+                    for dst in s.dsts}
+            else:
+                # threaded: slot travels with the micro-batch, hop by hop
+                slot = _select(idx == s.src_stage, v, skips_in[s.name])
+                comms_next[s.name] = _shift_chain(slot, n, axis)
+
+        # --- output collection at the last stage --------------------------
+        slot_i = jnp.clip(t - (n - 1), 0, m - 1)
+        take = jnp.logical_and(idx == n - 1, t >= n - 1)
+
+        def upd(buf, y):
+            cur = jax.lax.dynamic_index_in_dim(buf, slot_i, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                buf, jnp.where(take, y, cur), slot_i, 0)
+
+        outputs = jax.tree.map(upd, outputs, carry_out)
+
+        if streaming:
+            # rotate the input stream one rank towards stage 0 (full ring).
+            rot = [(i, (i - 1) % n) for i in range(n)]
+            stream_buf = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis, rot), stream_buf)
+            return state_next, comms_next, outputs, resident, stream_buf
+        return state_next, comms_next, outputs, resident
+
+    stream0 = inputs_mb if streaming else None
+
+    if cfg.unroll_ticks:
+        state, comms, outputs, stream = carry0, comms0, outputs0, stream0
+        for t in range(T):
+            out = tick_body(state, comms, outputs, resident,
+                            jnp.asarray(t), stream)
+            if streaming:
+                state, comms, outputs, resident, stream = out
+            else:
+                state, comms, outputs, resident = out
+    else:
+        def scan_body(loop, t):
+            if streaming:
+                state, comms, outputs, resident, stream = loop
+                return tick_body(state, comms, outputs, resident, t,
+                                 stream), None
+            state, comms, outputs, resident = loop
+            return tick_body(state, comms, outputs, resident, t), None
+        init = ((carry0, comms0, outputs0, resident, stream0) if streaming
+                else (carry0, comms0, outputs0, resident))
+        final, _ = jax.lax.scan(scan_body, init, jnp.arange(T))
+        outputs, resident = final[2], final[3]
+
+    return outputs, resident
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrapper: the public entry point
+# ---------------------------------------------------------------------------
+
+def pipeline_call(stage_apply: StageApplyFn,
+                  *,
+                  mesh: Mesh,
+                  cfg: ParallelConfig,
+                  skips: Sequence[SkipSpec] = (),
+                  skip_protos: Optional[Dict[str, Any]] = None,
+                  carry_proto=None,
+                  axis: str = PIPE_AXIS):
+    """Build ``(stage_params, inputs_mb, resident) -> (outputs, resident)``.
+
+    ``stage_params``/``resident`` leaves carry a leading ``n_stages`` axis
+    sharded over ``pipe``; ``inputs_mb`` is replicated over ``pipe`` (its
+    batch-ish dims may be sharded over the auto axes).  ``outputs`` gains a
+    leading ``pipe``-sharded axis: index ``[-1]`` for the last stage's
+    results (:func:`last_stage_output`).
+    """
+    # Input modes across the shard_map boundary:
+    #  * replicated (default): the transpose of the pipe-replicated in_spec
+    #    is a psum over the *manual* axis — this both dominates collective
+    #    bytes for embedding-fed models AND crashes XLA-CPU's
+    #    AllReducePromotion in bf16, so the inputs cross in fp32.
+    #  * streaming (cfg.stream_inputs, m % n == 0): micro-batches are
+    #    SHARDED over pipe (micro-batch i at rank i%n, slot i//n) and
+    #    rotated one hop per tick; the transpose is a reverse rotation (no
+    #    psum), memory drops by n, and bf16 is safe.
+    def inner(params, inputs_mb, resident, in_dtypes, cfg_run):
+        params = jax.tree.map(lambda a: a[0], params)
+        resident = jax.tree.map(lambda a: a[0], resident)
+        if cfg_run.stream_inputs:
+            inputs_mb = jax.tree.map(lambda a: a[0], inputs_mb)
+        inputs_mb = jax.tree.map(lambda a, d: a.astype(d), inputs_mb,
+                                 in_dtypes)
+        outs, res = run_pipeline(stage_apply, params, inputs_mb, cfg_run,
+                                 skips=skips, skip_protos=skip_protos,
+                                 resident=resident, carry_proto=carry_proto,
+                                 axis=axis)
+        outs = jax.tree.map(lambda a: a[None], outs)
+        res = jax.tree.map(lambda a: a[None], res)
+        return outs, res
+
+    def call(stage_params, inputs_mb, resident=None):
+        resident = {} if resident is None else resident
+        n, m = cfg.pipe, cfg.n_micro
+        streaming = cfg.stream_inputs and n > 1 and m % n == 0
+        cfg_run = cfg.with_(stream_inputs=streaming)
+        in_dtypes = jax.tree.map(lambda a: a.dtype, inputs_mb)
+        if streaming:
+            k = m // n
+            inputs_mb = jax.tree.map(
+                lambda a: a.reshape((k, n) + a.shape[1:]).swapaxes(0, 1),
+                inputs_mb)
+            in_spec_x = P(axis)
+            up = inputs_mb
+        else:
+            in_spec_x = P()
+            up = jax.tree.map(
+                lambda a: a.astype(jnp.float32)
+                if a.dtype == jnp.bfloat16 else a, inputs_mb)
+        if cfg.pipe > 1:
+            fn = shard_map(
+                functools.partial(inner, in_dtypes=in_dtypes,
+                                  cfg_run=cfg_run), mesh=mesh,
+                in_specs=(P(axis), in_spec_x, P(axis)),
+                out_specs=(P(axis), P(axis)),
+                axis_names={axis}, check_vma=False)
+        else:
+            # Degenerate single-stage pipeline: plain sequential execution,
+            # no manual axis (avoids size-1 manual subgroups).
+            fn = functools.partial(inner, in_dtypes=in_dtypes,
+                                   cfg_run=cfg_run.with_(stream_inputs=False))
+        return fn(stage_params, up, resident)
+
+    return call
+
+
+def last_stage_output(outputs):
+    """Extract the last pipe rank's collected outputs: [m, ...] pytree."""
+    return jax.tree.map(lambda a: a[-1], outputs)
+
+
+def microbatch(tree, n_micro: int):
+    """Split leading batch dim B -> [n_micro, B // n_micro, ...]."""
+    def f(a):
+        b = a.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} not divisible by n_micro {n_micro}")
+        return a.reshape((n_micro, b // n_micro) + a.shape[1:])
+    return jax.tree.map(f, tree)
+
+
+def unmicrobatch(tree):
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), tree)

@@ -1,0 +1,193 @@
+"""Pipeline schedules as host-level task tables.
+
+The paper's *deterministic clock-cycle* (Algorithm 1) totally orders the tasks
+``F_{i,j}`` by their distance ``k = i + j`` to ``F_{0,0}`` (0-indexed here; the
+paper uses 1-indexing so its ``k = i + j - 1``).  In an eager framework that
+ordering is what the host thread must issue; in our trace-and-compile setting
+the same ordering is realized *structurally* by a scan over clock ticks — this
+module is the single source of truth both for that scan (which tick runs which
+task) and for the property tests that prove the orderings agree with the
+paper's Algorithm 1 and its dependency constraints (§2.1).
+
+Task naming follows the paper: F(i, j) is the forward of micro-batch ``i`` on
+partition ``j``; B(i, j) its backward; R(i, j) the recomputation ``F'_{i,j}``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Sequence, Tuple
+
+
+@dataclass(frozen=True, order=True)
+class Task:
+    kind: str        # "F" | "B" | "R"
+    micro: int       # i  (0-indexed)
+    stage: int       # j  (0-indexed)
+
+    def __repr__(self) -> str:  # compact: F[i,j]
+        return f"{self.kind}[{self.micro},{self.stage}]"
+
+
+def clock_cycles(m: int, n: int) -> Iterator[List[Task]]:
+    """Paper Algorithm 1 (deterministic clock-cycle), 0-indexed.
+
+    Yields, for each clock tick ``k = 0 .. m+n-2``, the list of forward tasks
+    ``F_{i,j}`` with ``i + j == k``.  Tasks within one tick are independent
+    (they touch different stages *and* different micro-batches) and may be
+    issued concurrently, exactly as in the paper.
+    """
+    if m < 1 or n < 1:
+        raise ValueError(f"need m >= 1 and n >= 1, got {m=} {n=}")
+    for k in range(m + n - 1):
+        yield [Task("F", i, k - i)
+               for i in range(max(0, k - n + 1), min(m, k + 1))]
+
+
+def gpipe_backward_cycles(m: int, n: int, *, checkpoint: bool = True,
+                          recompute_last_micro: bool = False) -> Iterator[List[Task]]:
+    """The reverse clock-cycle that autodiff induces for GPipe.
+
+    Backward task ``B_{i,j}`` runs at reverse tick ``k' = (m-1-i) + (n-1-j)``.
+    With checkpointing, the recomputation ``R_{i,j}`` is scheduled in the same
+    tick immediately before ``B_{i,j}`` — except for each stage's *last*
+    forward micro-batch (``i == m-1``), whose recompute the paper elides
+    (§2.1: "re-computations for the last micro-batch are unnecessary").
+    """
+    for k in range(m + n - 1):
+        tasks: List[Task] = []
+        for i in range(m):
+            j = (m - 1 - i) + (n - 1) - k
+            if 0 <= j < n:
+                if checkpoint and (recompute_last_micro or i != m - 1):
+                    tasks.append(Task("R", i, j))
+                tasks.append(Task("B", i, j))
+        yield tasks
+
+
+def gpipe_schedule(m: int, n: int, *, checkpoint: bool = True,
+                   recompute_last_micro: bool = False) -> List[List[Task]]:
+    """Full GPipe schedule: forward fill-drain, then backward fill-drain."""
+    fwd = list(clock_cycles(m, n))
+    bwd = list(gpipe_backward_cycles(m, n, checkpoint=checkpoint,
+                                     recompute_last_micro=recompute_last_micro))
+    return fwd + bwd
+
+
+def one_f_one_b_schedule(m: int, n: int) -> List[List[Task]]:
+    """1F1B (PipeDream-flush) schedule — beyond-paper optimization.
+
+    Same synchronous semantics as GPipe (flush every mini-batch) but each
+    stage starts draining backward as soon as its first backward dependency
+    resolves, bounding stashed activations by ``n - j`` instead of ``m``.
+
+    Built per-stage: stage ``j`` runs ``min(n - j, m)`` warmup forwards, then
+    alternates 1F/1B, then drains remaining backwards.  The global table is
+    produced by simulating the per-stage queues under the cross-stage
+    dependencies (F(i,j) needs F(i,j-1); B(i,j) needs B(i,j+1)).
+    """
+    per_stage: List[List[Task]] = []
+    for j in range(n):
+        warm = min(n - j, m)
+        order: List[Task] = [Task("F", i, j) for i in range(warm)]
+        fi, bi = warm, 0
+        while bi < m:
+            order.append(Task("B", bi, j)); bi += 1
+            if fi < m:
+                order.append(Task("F", fi, j)); fi += 1
+        per_stage.append(order)
+
+    done = set()
+    ptr = [0] * n
+    table: List[List[Task]] = []
+    while any(ptr[j] < len(per_stage[j]) for j in range(n)):
+        tick: List[Task] = []
+        for j in range(n):
+            if ptr[j] >= len(per_stage[j]):
+                continue
+            t = per_stage[j][ptr[j]]
+            dep_ok = (
+                (t.kind == "F" and (t.stage == 0 or Task("F", t.micro, t.stage - 1) in done))
+                or (t.kind == "B" and (t.stage == n - 1 or Task("B", t.micro, t.stage + 1) in done))
+            )
+            if dep_ok:
+                tick.append(t)
+        if not tick:
+            raise RuntimeError(f"1F1B deadlock at ptrs={ptr} (m={m}, n={n})")
+        for t in tick:
+            done.add(t)
+            ptr[t.stage] += 1
+        table.append(tick)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Schedule metrics (used by tests and by the balance/bubble reporting)
+# ---------------------------------------------------------------------------
+
+def bubble_fraction(m: int, n: int) -> float:
+    """GPipe bubble fraction (n-1)/(m+n-1) — idle tick share per stage."""
+    return (n - 1) / (m + n - 1)
+
+
+def peak_stash(table: Sequence[Sequence[Task]], n: int, m: int) -> List[int]:
+    """Peak number of outstanding forward activations stashed per stage."""
+    live = [0] * n
+    peak = [0] * n
+    for tick in table:
+        for t in tick:
+            if t.kind == "F":
+                live[t.stage] += 1
+                peak[t.stage] = max(peak[t.stage], live[t.stage])
+            elif t.kind == "B":
+                live[t.stage] -= 1
+    return peak
+
+
+def validate(table: Sequence[Sequence[Task]], m: int, n: int,
+             *, checkpoint: bool = False,
+             recompute_last_micro: bool = False,
+             backward_micro_order: bool = True) -> None:
+    """Assert the schedule respects every dependency in the paper's §2 graph.
+
+    Raises AssertionError on: missing/duplicate tasks, F(i,j) before
+    F(i,j-1), B(i,j) before B(i,j+1), per-stage micro-batch order violations
+    (F(i+1,j) before F(i,j) / B(i-1,j) before B(i,j), the dashed arrows of
+    Fig. 2), or a B(i,j) without its R(i,j) earlier in the same stage.
+
+    ``backward_micro_order=False`` relaxes the B-side dashed-arrow order:
+    1F1B deliberately drains early backwards (B[i] before B[i+1] at a
+    stage), which is a *schedule choice* in GPipe, not a data dependency.
+    """
+    seen = {}
+    order = 0
+    for tick in table:
+        stages_this_tick = set()
+        for t in tick:
+            assert t not in seen, f"duplicate {t}"
+            assert (t.stage, t.kind) not in stages_this_tick, \
+                f"stage {t.stage} runs two {t.kind} tasks in one tick"
+            stages_this_tick.add((t.stage, t.kind))
+            seen[t] = order
+        order += 1
+    expect_f = {Task("F", i, j) for i in range(m) for j in range(n)}
+    expect_b = {Task("B", i, j) for i in range(m) for j in range(n)}
+    have = set(seen)
+    assert expect_f <= have, f"missing forwards: {sorted(expect_f - have)[:4]}"
+    assert expect_b <= have, f"missing backwards: {sorted(expect_b - have)[:4]}"
+    for i in range(m):
+        for j in range(n):
+            if j > 0:
+                assert seen[Task("F", i, j - 1)] < seen[Task("F", i, j)]
+                assert seen[Task("B", i, j)] < seen[Task("B", i, j - 1)]
+            if i > 0:
+                assert seen[Task("F", i - 1, j)] < seen[Task("F", i, j)], \
+                    f"micro-batch order: F[{i-1},{j}] !< F[{i},{j}]"
+                if backward_micro_order:
+                    assert seen[Task("B", i, j)] < seen[Task("B", i - 1, j)], \
+                        f"micro-batch order: B[{i},{j}] !< B[{i-1},{j}]"
+            if checkpoint:
+                needs_r = recompute_last_micro or i != m - 1
+                if needs_r:
+                    r = Task("R", i, j)
+                    assert r in seen and seen[r] <= seen[Task("B", i, j)], \
+                        f"{r} must precede B[{i},{j}]"

@@ -1,0 +1,177 @@
+"""Layer -> stage assembly: stacked (homogeneous) and switch (heterogeneous).
+
+torchgpipe requires only "a sequence of layers" and lets the balance module
+choose the partition.  Two SPMD-compatible stage program forms:
+
+* **Stacked** (homogeneous families — every transformer LM here): all blocks
+  share one parameter structure, stacked to ``[n_stages, L_per_stage, ...]``
+  with the leading axis sharded over ``pipe``; a stage scans (or unrolls) its
+  ``L_per_stage`` slice.  Layer counts that do not divide evenly are padded
+  with *identity* layers: a per-layer ``mask`` constant multiplies the block's
+  residual delta, so padded layers are exact identities and receive exactly
+  zero gradient.  Pad FLOPs remain in the compiled HLO and are charged
+  honestly to the roofline's MODEL/HLO ratio.
+
+* **Switch** (heterogeneous — U-Net / AmoebaNet stages with different channel
+  counts): each stage's parameter pytree is flattened into one fp32 buffer,
+  padded to the max stage size, and stacked ``[n_stages, max_flat]``; inside
+  the SPMD program ``lax.switch(stage_idx, branches)`` unpacks the buffer
+  with static shapes per branch and runs that stage's own code.  The carried
+  activation is likewise a flat padded buffer (stage boundaries differ in
+  shape).  Each rank stores only its own stage's buffer — memory scales as
+  the paper's per-device placement — while every branch's *code* exists on
+  every rank (an SPMD fact of life; runtime executes one branch).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous stacked stages
+# ---------------------------------------------------------------------------
+
+def pad_layout(n_layers: int, n_stages: int) -> Tuple[int, np.ndarray]:
+    """Uniform layers-per-stage with identity padding.
+
+    Returns (L_per_stage, mask[n_stages, L_per_stage]) where mask is 1.0 for
+    real layers.  Real layers fill stages front-to-back; padding lands at the
+    end of the later stages.
+    """
+    L = -(-n_layers // n_stages)  # ceil
+    mask = np.zeros((n_stages, L), np.float32)
+    flat = mask.reshape(-1)
+    flat[:n_layers] = 1.0
+    return L, mask
+
+
+def stack_layer_params(layer_params: Sequence[Any], n_stages: int) -> Any:
+    """Stack per-layer pytrees (length ≤ n_stages*L) into [n_stages, L, ...].
+
+    Missing (padding) layers are zero-filled.
+    """
+    L, _ = pad_layout(len(layer_params), n_stages)
+    proto = layer_params[0]
+    pad = jax.tree.map(jnp.zeros_like, proto)
+    full = list(layer_params) + [pad] * (n_stages * L - len(layer_params))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *full)
+    return jax.tree.map(
+        lambda a: a.reshape((n_stages, L) + a.shape[1:]), stacked)
+
+
+def scan_layers(layer_apply: Callable, stage_params, x, *extra,
+                unroll: bool = False):
+    """Apply a stage's stacked layers in sequence.
+
+    ``layer_apply(one_layer_params, x, *extra) -> x``; stage_params leaves
+    have leading [L_per_stage].
+    """
+    leaves = jax.tree.leaves(stage_params)
+    L = leaves[0].shape[0] if leaves else 0
+    if unroll:
+        for l in range(L):
+            x = layer_apply(jax.tree.map(lambda a: a[l], stage_params), x, *extra)
+        return x
+
+    def body(x, lp):
+        return layer_apply(lp, x, *extra), None
+
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous switch stages
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FlatStage:
+    """One heterogeneous stage: its apply fn + the shapes needed to unpack."""
+    apply: Callable            # apply(params_pytree, x_pytree, ctx) -> y_pytree
+    params_treedef: Any
+    params_shapes: List[Tuple[Tuple[int, ...], Any]]   # [(shape, dtype)]
+    in_proto: Any              # pytree of ShapeDtypeStruct (stage input)
+    out_proto: Any             # pytree of ShapeDtypeStruct (stage output)
+
+
+def flatten_params(params) -> Tuple[jnp.ndarray, Any, List]:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    shapes = [(tuple(l.shape), l.dtype) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+    return flat, treedef, shapes
+
+
+def unflatten_params(flat, treedef, shapes):
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def pack_buffer(tree, size: int) -> jnp.ndarray:
+    """Flatten activation pytree into a padded fp32 buffer of ``size``."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(l.shape[0], -1).astype(jnp.float32)
+                            for l in leaves], axis=1)
+    pad = size - flat.shape[1]
+    if pad < 0:
+        raise ValueError(f"buffer too small: need {flat.shape[1]}, have {size}")
+    return jnp.pad(flat, ((0, 0), (0, pad)))
+
+
+def unpack_buffer(buf, proto):
+    leaves, treedef = jax.tree_util.tree_flatten(proto)
+    out, off = [], 0
+    b = buf.shape[0]
+    for l in leaves:
+        n = int(np.prod(l.shape[1:]))
+        out.append(buf[:, off:off + n].reshape((b,) + tuple(l.shape[1:]))
+                   .astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def buffer_elems(proto) -> int:
+    """Per-example element count of a stage-boundary pytree."""
+    return int(sum(np.prod(l.shape[1:]) for l in jax.tree.leaves(proto)))
+
+
+def build_switch_program(stages: Sequence[FlatStage]):
+    """Build (stacked_flat_params, stage_apply) for the pipeline runner.
+
+    The carried activation is {"buf": [mb, max_elems] fp32}; each branch
+    unpacks with its own static shapes.
+    """
+    n = len(stages)
+    max_elems = max(buffer_elems(s.in_proto) for s in stages)
+    max_elems = max(max_elems, max(buffer_elems(s.out_proto) for s in stages))
+
+    def stack(flat_list):
+        size = max(f.shape[0] for f in flat_list)
+        return jnp.stack([jnp.pad(f, (0, size - f.shape[0])) for f in flat_list])
+
+    def make_branch(k: int):
+        st = stages[k]
+
+        def branch(flat_params, buf, ctx):
+            p = unflatten_params(flat_params, st.params_treedef, st.params_shapes)
+            x = unpack_buffer(buf, st.in_proto)
+            y = st.apply(p, x, ctx)
+            return pack_buffer(y, max_elems)
+        return branch
+
+    branches = [make_branch(k) for k in range(n)]
+
+    def stage_apply_buf(flat_params, buf, stage_idx, ctx):
+        return jax.lax.switch(stage_idx, branches, flat_params, buf, ctx)
+
+    return stack, stage_apply_buf, max_elems

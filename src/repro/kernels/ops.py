@@ -1,0 +1,131 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * TPU backend           -> Pallas kernels (compiled).
+  * REPRO_PALLAS_INTERPRET=1 -> Pallas kernels in interpret mode (CPU tests).
+  * otherwise (CPU dry-run / smokes) -> the blocked pure-jnp implementations
+    from :mod:`repro.kernels.ref`, which share the kernels' algorithmic
+    structure (no [S, S] materialization) so the dry-run roofline reflects
+    the same memory behaviour the TPU kernel has.
+
+The Pallas forwards are wrapped in ``jax.custom_vjp`` with backward passes
+taken from the reference implementations' VJPs: the recurrences are linear
+enough that XLA's fused backward of the blocked reference is already
+MXU-shaped, and it keeps the oracle and the gradient definition identical.
+(A hand-written dq/dk/dv Pallas backward is a further optimization hook; see
+EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6 import wkv6_pallas
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention_pallas(q, k, v, causal, window, q_offset):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, interpret=_interpret())
+
+
+def _attention_fwd(q, k, v, causal, window, q_offset):
+    out = _attention_pallas(q, k, v, causal, window, q_offset)
+    return out, (q, k, v)
+
+
+def _attention_bwd(causal, window, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.mha_blocked(q_, k_, v_, causal=causal,
+                                           window=window, q_offset=q_offset),
+        q, k, v)
+    return vjp(g)
+
+
+_attention_pallas.defvjp(_attention_fwd, _attention_bwd)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset: int = 0,
+              kv_len=None):
+    """GQA attention: q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D].
+
+    ``causal``/``window``/``kv_len`` may be traced (mixed per-layer layouts);
+    the Pallas kernel requires them static and handles the common uniform
+    cases, the blocked-jnp path (same algorithm, blocked custom VJP) covers
+    the rest."""
+    static = (isinstance(causal, (bool, int))
+              and (window is None or isinstance(window, int))
+              and kv_len is None)
+    if (_use_pallas() or _interpret()) and static:
+        return _attention_pallas(q, k, v, bool(causal), int(window or 0),
+                                 q_offset)
+    return ref.mha_blocked(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 WKV
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp)
+def _wkv6_pallas_op(r, k, v, w, u, s0):
+    return wkv6_pallas(r, k, v, w, u, s0, interpret=_interpret())
+
+
+def _wkv6_fwd(r, k, v, w, u, s0):
+    out = _wkv6_pallas_op(r, k, v, w, u, s0)
+    return out, (r, k, v, w, u, s0)
+
+
+def _wkv6_bwd(res, g):
+    r, k, v, w, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: ref.wkv6(*a), r, k, v, w, u, s0)
+    return vjp(g)
+
+
+_wkv6_pallas_op.defvjp(_wkv6_fwd, _wkv6_bwd)
+
+
+def wkv6(r, k, v, w, u, state0=None):
+    """RWKV-6 recurrence. Returns (out [B,H,T,V], state [B,H,K,V])."""
+    if state0 is None:
+        B, H, _, K = r.shape
+        state0 = jnp.zeros((B, H, K, v.shape[-1]), jnp.float32)
+    if _use_pallas() or _interpret():
+        return _wkv6_pallas_op(r, k, v, w, u, state0)
+    return ref.wkv6(r, k, v, w, u, state0)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    if _use_pallas() or _interpret():
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+        return rmsnorm_pallas(x, scale, eps, interpret=_interpret())
+    return ref.rmsnorm(x, scale, eps)
+
+
+# Re-exported conveniences used by the model layers
+decode_attend = ref.decode_attend
+lse_combine = ref.lse_combine

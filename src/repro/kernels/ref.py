@@ -1,0 +1,341 @@
+"""Pure-jnp oracles for every Pallas kernel (and the XLA fallback paths).
+
+Two flavours of attention reference:
+
+* :func:`mha_naive` — materializes the full [*, Sq, Sk] score matrix. The
+  ground-truth oracle for tests; O(S^2) memory.
+* :func:`mha_blocked` — lax.scan over key/value blocks with online softmax
+  (the flash-attention recurrence in plain jnp).  Numerically equivalent,
+  O(S·block) memory — this is the default XLA path on non-TPU backends and
+  the one the dry-run lowers, so the roofline's memory term reflects a
+  non-materializing attention just as the TPU Pallas kernel does.
+
+GQA convention everywhere: q is [B, Hq, Sq, D]; k/v are [B, Hkv, Sk, D] with
+Hq % Hkv == 0 (kv heads broadcast over Hq // Hkv query groups).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, hq):
+    hkv = k.shape[1]
+    if hkv == hq:
+        return k
+    assert hq % hkv == 0, f"Hq={hq} not a multiple of Hkv={hkv}"
+    return jnp.repeat(k, hq // hkv, axis=1)
+
+
+def attention_mask(sq: int, sk: int, *, causal: bool, window: int = 0,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """[Sq, Sk] boolean mask. ``q_offset`` positions queries within the key
+    timeline (decode: q_offset = cache_len)."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= ki <= qi
+    if window and window > 0:
+        m &= ki > qi - window
+    return m
+
+
+def mha_naive(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0, scale: Optional[float] = None):
+    """Ground-truth attention oracle (materializes scores)."""
+    B, Hq, Sq, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = attention_mask(Sq, k.shape[2], causal=causal, window=window,
+                          q_offset=q_offset)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _block_mask(qi, ki, sk, *, causal, window, kv_len):
+    """[bq?, bk] mask; ``causal``/``window``/``kv_len`` may be traced."""
+    msk = ki < sk
+    if causal is not None:
+        c = jnp.asarray(causal, bool)
+        msk &= jnp.where(c, ki <= qi, True)
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        msk &= jnp.where(w > 0, ki > qi - w, True)
+    if kv_len is not None:
+        msk &= ki < jnp.asarray(kv_len, jnp.int32)
+    return msk
+
+
+def _mha_blocked_fwd_pass(q, k, v, *, causal, window, q_offset, scale,
+                          block_k, kv_len):
+    B, Hq, Sq, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[2]
+    bk = min(block_k, Sk)
+    nb = -(-Sk // bk)
+    pad = nb * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, Hq, nb, bk, -1).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hq, nb, bk, -1).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32) * scale
+    qi = jnp.arange(Sq)[:, None] + q_offset
+
+    def body(carry, inp):
+        acc, m_prev, l_prev = carry
+        kblk, vblk, bidx = inp
+        ki = bidx * bk + jnp.arange(bk)[None, :]
+        msk = _block_mask(qi, ki, Sk, causal=causal, window=window,
+                          kv_len=kv_len)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk.astype(jnp.float32))
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hq, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (kb, vb, jnp.arange(nb)))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _mha_blocked_core(q, k, v, causal, window, kv_len, q_offset, scale,
+                      block_k):
+    out, _ = _mha_blocked_fwd_pass(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale,
+                                   block_k=block_k, kv_len=kv_len)
+    return out
+
+
+def _mha_core_fwd(q, k, v, causal, window, kv_len, q_offset, scale, block_k):
+    out, lse = _mha_blocked_fwd_pass(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, scale=scale,
+                                     block_k=block_k, kv_len=kv_len)
+    return out, (q, k, v, out, lse, causal, window, kv_len)
+
+
+def _mha_core_bwd(q_offset, scale, block_k, res, do):
+    """Flash-attention backward: re-materialize probabilities block-by-block
+    (never the full [Sq, Sk] matrix) and accumulate dq; dk/dv per block."""
+    q, k, v, out, lse, causal, window, kv_len = res
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    bk = min(block_k, Sk)
+    nb = -(-Sk // bk)
+    pad = nb * bk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else v
+    kb = kp.reshape(B, Hq, nb, bk, -1).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, Hq, nb, bk, -1).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    outf = out.astype(jnp.float32)
+    delta = jnp.sum(dof * outf, axis=-1)                      # [B,H,Sq]
+    qi = jnp.arange(Sq)[:, None] + q_offset
+
+    def body(dq, inp):
+        kblk, vblk, bidx = inp
+        ki = bidx * bk + jnp.arange(bk)[None, :]
+        msk = _block_mask(qi, ki, Sk, causal=causal, window=window,
+                          kv_len=kv_len)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf * scale,
+                       kblk.astype(jnp.float32))
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # [B,H,Sq,bk]
+        dv_b = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                             kblk.astype(jnp.float32))
+        dk_b = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+    dk = dkb.transpose(1, 2, 0, 3, 4).reshape(B, Hq, nb * bk, -1)[:, :, :Sk]
+    dv = dvb.transpose(1, 2, 0, 3, 4).reshape(B, Hq, nb * bk, -1)[:, :, :Sk]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None)
+
+
+_mha_blocked_core.defvjp(_mha_core_fwd, _mha_core_bwd)
+
+
+def mha_blocked(q, k, v, *, causal=True, window=None, q_offset: int = 0,
+                scale: Optional[float] = None, block_k: int = 512,
+                kv_len=None):
+    """Flash-attention recurrence in plain jnp (scan over KV blocks) with a
+    blocked custom VJP — O(S·block) memory in forward AND backward.
+
+    ``causal``/``window``/``kv_len`` may be traced scalars (mixed per-layer
+    attention layouts); GQA kv heads are broadcast.  ``window`` semantics:
+    None or 0 => unlimited."""
+    B, Hq, Sq, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    if isinstance(window, int) and window == 0:
+        window = None
+    if isinstance(causal, (bool, int)):
+        causal = bool(causal)
+    return _mha_blocked_core(q, k, v, causal, window, kv_len,
+                             q_offset, scale, min(block_k, k.shape[2]))
+
+
+def decode_attend(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                  scale: Optional[float] = None):
+    """Single-token decode attention against a [B, Hkv, Smax, D] cache.
+
+    Returns (out [B, Hq, 1, D], partial (num, max, denom)) — the partial
+    triple supports cross-shard LSE combination when the cache's sequence
+    dim is sharded (long-context decode; see layers.seq_sharded_decode).
+    """
+    B, Hq, _, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    k = _expand_kv(k_cache, Hq).astype(jnp.float32)
+    v = _expand_kv(v_cache, Hq).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, k)
+    ki = jnp.arange(k.shape[2])[None, None, None, :]
+    valid = ki < cache_len.reshape(B, 1, 1, 1)
+    if window and window > 0:
+        valid &= ki >= cache_len.reshape(B, 1, 1, 1) - window
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    num = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    den = p.sum(-1)
+    out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+    return out, (num, m, den)
+
+
+def lse_combine(partials):
+    """Combine per-shard (num, max, denom) decode partials (sequence sharding)."""
+    nums, ms, dens = zip(*partials)
+    m = functools.reduce(jnp.maximum, ms)
+    num = sum(n * jnp.exp(mm - m)[..., None] for n, mm in zip(nums, ms))
+    den = sum(d * jnp.exp(mm - m) for d, mm in zip(dens, ms))
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) WKV recurrence
+# ---------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, state0=None):
+    """RWKV-6 recurrence, sequential oracle.
+
+    Shapes: r/k/w [B, H, T, K]; v [B, H, T, V]; u [H, K]; state [B, H, K, V].
+      out_t  = r_t · (state_t + u ⊙ k_t ⊗ v_t)
+      state' = diag(w_t) state_t + k_t ⊗ v_t            (w data-dependent)
+    Returns (out [B, H, T, V], state_T).
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    s0 = jnp.zeros((B, H, K, V), f32) if state0 is None else state0.astype(f32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp            # [B,H,K],[B,H,K],[B,H,V],[B,H,K]
+        kv = kt[..., :, None] * vt[..., None, :]         # [B,H,K,V]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = (r.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), w.transpose(2, 0, 1, 3))
+    sT, out = jax.lax.scan(step, s0, xs)
+    return out.transpose(1, 2, 0, 3), sT
+
+
+def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 64):
+    """Chunked WKV-6: O(T/C) sequential steps, O(C^2) parallel intra-chunk.
+
+    This is the algorithm the Pallas kernel implements (DESIGN.md: TPU-native
+    chunked linear attention instead of the CUDA per-timestep kernel):
+      within a chunk, out_t = r_t · (A_t ⊙ S_in) + Σ_{s<=t} decay(s..t) terms
+    using cumulative log-decay products.
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    assert T % C == 0, f"T={T} not divisible by chunk={C}"
+    n = T // C
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    s0 = jnp.zeros((B, H, K, V), f32) if state0 is None else state0.astype(f32)
+
+    logw = jnp.log(jnp.maximum(w, 1e-30)).reshape(B, H, n, C, K)
+    rc = r.reshape(B, H, n, C, K)
+    kc = k.reshape(B, H, n, C, K)
+    vc = v.reshape(B, H, n, C, V)
+
+    # cumulative decays within chunk: cum[t] = sum_{s<=t} logw[s]
+    cum = jnp.cumsum(logw, axis=3)                       # [B,H,n,C,K]
+    total = cum[..., -1, :]                              # [B,H,n,K]
+
+    def chunk_step(s, inp):
+        rC, kC, vC, cumC, totC, logwC = inp              # [B,H,C,K]...
+        # inter-chunk: queries see carried state decayed by cum_{t-1}
+        decay_q = jnp.exp(cumC - logwC)                  # prod_{s<t} w_s (exclusive)
+        inter = jnp.einsum("bhck,bhkv->bhcv", rC * decay_q, s)
+        # intra-chunk: pair (s_idx <= t_idx) with decay prod_{s_idx<j<=?}:
+        #   contribution of key step i to query step t>i: exp(cum_{t-1}-cum_i)
+        qd = cumC - logwC                                # cum_{t-1}
+        kd = cumC                                        # cum_i
+        att = jnp.einsum("bhctk->bhct",
+                         (rC[:, :, :, None, :] * kC[:, :, None, :, :]
+                          * jnp.exp(qd[:, :, :, None, :] - kd[:, :, None, :, :])))
+        C_ = rC.shape[2]
+        tri = jnp.tril(jnp.ones((C_, C_), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        # bonus (u) term: current-step k contributes via u, no decay
+        bonus = jnp.einsum("bhck,bhck->bhc", rC, kC * u[None, :, None, :])
+        intra = jnp.einsum("bhct,bhtv->bhcv", att, vC) \
+            + bonus[..., None] * vC
+        out = inter + intra
+        # state update: s' = diag(prod w) s + sum_i (prod_{j>i} w_j) k_i v_i
+        kdecay = jnp.exp(totC[:, :, None, :] - cumC)     # prod_{j>i} w_j
+        s = jnp.exp(totC)[..., None] * s + jnp.einsum(
+            "bhck,bhcv->bhkv", kC * kdecay, vC)
+        return s, out
+
+    xs = tuple(x.transpose(2, 0, 1, 3, 4) for x in (rc, kc, vc, cum,)) + \
+        (total.transpose(2, 0, 1, 3), logw.transpose(2, 0, 1, 3, 4))
+    sT, out = jax.lax.scan(chunk_step, s0, xs)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, T, V)
+    return out, sT
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture × input shape × mesh) cell: build the step function,
+``jax.jit(...).lower(**abstract_inputs).compile()`` against the production
+mesh — 16×16 single-pod and 2×16×16 multi-pod — and record
+``memory_analysis()`` / ``cost_analysis()`` / the trip-count-corrected HLO
+roofline terms into a JSON artifact that EXPERIMENTS.md §Dry-run/§Roofline
+read.  A failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.models.lm import LMModel
+from repro.roofline import analysis
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             keep_hlo: bool = False, pcfg_override=None,
+             optimized: bool = False, verbose: bool = True) -> dict:
+    arch = configs.get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    if not configs.shape_applies(arch, shape):
+        return {"arch": arch_name, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic decode "
+                          "(full-attention arch; DESIGN.md §4)"}
+    pcfg = pcfg_override or configs.get_parallel(arch_name,
+                                                 optimized=optimized)
+    pcfg = pcfg.with_(pod=2 if multi_pod else 1,
+                      n_micro=configs.derive_n_micro(
+                          shape, pcfg.with_(pod=2 if multi_pod else 1)))
+    base = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh = mesh_lib.make_arch_mesh(pcfg, base=base)
+    n_dev = mesh.size
+    model = LMModel(arch, pcfg)
+    t0 = time.time()
+    cell = steps.build_cell(model, pcfg, mesh, shape)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.abstract_args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    cost = analysis.analyze_hlo(hlo, n_dev)
+    mf = analysis.model_flops_for(arch, shape) / n_dev
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    rep = analysis.RooflineReport(
+        arch=arch_name, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        flops=cost.flops, bytes_hbm=cost.hbm_bytes,
+        coll_bytes=cost.total_coll, coll_detail=cost.coll_link_bytes,
+        model_flops_per_dev=mf, n_devices=n_dev,
+        memory_per_device=per_dev_bytes,
+        xla_flops=float(ca.get("flops", 0.0)),
+        notes=f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro}")
+    out = rep.to_dict()
+    out.update({
+        "skipped": False,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "coll_counts": cost.coll_counts,
+        "memory_analysis": {
+            "argument_size": mem.argument_size_in_bytes,
+            "output_size": mem.output_size_in_bytes,
+            "temp_size": mem.temp_size_in_bytes,
+            "alias_size": mem.alias_size_in_bytes,
+        },
+        "pcfg": {"pipe": pcfg.pipe, "tp": pcfg.tp, "data": pcfg.data,
+                 "pod": pcfg.pod, "n_micro": pcfg.n_micro,
+                 "remat": pcfg.remat},
+    })
+    if verbose:
+        print(f"[dryrun] {arch_name}/{shape_name} mesh={out['mesh']} "
+              f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
+              f"compile={out['compile_s']}s "
+              f"mem/dev={per_dev_bytes/2**30:.2f}GiB "
+              f"t=(c {rep.t_compute*1e3:.1f} | m {rep.t_memory*1e3:.1f} | "
+              f"x {rep.t_collective*1e3:.1f}) ms "
+              f"bottleneck={rep.bottleneck} "
+              f"roofline={rep.roofline_fraction:.3f}")
+        print(f"[dryrun]   memory_analysis: {mem}")
+    if keep_hlo:
+        out["hlo"] = hlo
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the §Perf-hillclimbed parallel configs")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in configs.ARCH_NAMES:
+            for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for a, s in cells:
+            try:
+                results.append(run_cell(a, s, multi_pod=mp,
+                                        optimized=args.optimized))
+            except Exception as e:   # a dry-run failure is a framework bug
+                traceback.print_exc()
+                results.append({"arch": a, "shape": s,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "skipped": False, "error": str(e)[:500]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} cells -> {args.out}")
+    errs = [r for r in results if r.get("error")]
+    if errs:
+        raise SystemExit(f"{len(errs)} cells FAILED: "
+                         f"{[(r['arch'], r['shape']) for r in errs]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (§Perf): re-run a dry-run cell under parallel-config
+overrides and print the roofline delta vs the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \\
+        --arch deepseek-7b --shape train_4k \\
+        --set gather_weights_once=True pipe=8 tp=2
+"""
+import argparse
+import ast
+import json
+
+from repro import configs
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ParallelConfig overrides, e.g. pipe=8 tp=2")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    pcfg = configs.get_parallel(args.arch).with_(**overrides)
+    r = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 pcfg_override=pcfg)
+    if args.out:
+        json.dump(r, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""ShardingPlan: NamedSharding assignment for every array in a step.
+
+Conventions (DESIGN.md §3):
+  * stage parameters [n_stages, L_per_stage, ...]: 'pipe' on axis 0; the
+    trailing weight dims get FSDP ('data') on the input-ish dim and TP
+    ('tp') on the output-ish dim (reversed for output projections so the TP
+    all-reduce lands after the second matmul); MoE experts get EP ('tp') on
+    the expert dim.  Every assignment checks divisibility and degrades to
+    replication per-dim otherwise.
+  * embed/head: vocab over 'data' (FSDP), d_model over 'tp'.
+  * optimizer state mirrors its parameter leaf-for-leaf.
+  * batch: leading dim over ('pod', 'data').
+  * KV caches [n_stages, L, m, mb, slots, kv, hd]: 'pipe' + micro-batch over
+    ('pod','data') when divisible, otherwise the slots dim over 'data'
+    (sequence-sharded long-context decode; GSPMD inserts the LSE reductions).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = ("pod", "data")
+
+# per-leaf-name TP placement: which trailing dim gets 'tp'
+_TP_IN = {"wo", "wd", "wv_cm"}        # output projections: tp on input dim
+_EXPERT = {"wg", "wu", "wd"}          # under a "moe" subtree: dim0 = experts
+
+
+def _axsize(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= _axsize(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _fit(dim: int, mesh: Mesh, axis) -> Any:
+    n = _axsize(mesh, axis)
+    return axis if n > 0 and dim % n == 0 else None
+
+
+def stage_param_spec(path: Tuple[str, ...], leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one stacked stage-parameter leaf."""
+    name = path[-1]
+    in_moe = "moe" in path
+    shape = leaf.shape
+    nd = leaf.ndim
+    # axes 0,1 = (n_stages, L_per_stage)
+    rest = [None] * (nd - 2)
+    # FSDP dim shards over (pod, data) jointly: ZeRO-3 spans *all* data
+    # parallelism so optimizer state (which mirrors these specs) scales with
+    # the full DP degree — required to fit llama3-405b's Adam state.
+    fsdp = (("pod", "data") if _axsize(mesh, "pod") > 1 else "data")
+    if nd >= 4 and in_moe and name in _EXPERT:
+        # [n, L, E, din, dout]
+        rest[0] = _fit(shape[2], mesh, "tp")
+        rest[1] = _fit(shape[3], mesh, fsdp) or _fit(shape[3], mesh, "data")
+    elif nd == 4:
+        din, dout = shape[2], shape[3]
+        if name in _TP_IN:
+            rest[0] = _fit(din, mesh, "tp")
+            rest[1] = _fit(dout, mesh, fsdp) or _fit(dout, mesh, "data")
+        else:
+            rest[0] = _fit(din, mesh, fsdp) or _fit(din, mesh, "data")
+            rest[1] = _fit(dout, mesh, "tp")
+    elif nd == 3 and shape[2] >= 1024:
+        rest[0] = _fit(shape[2], mesh, fsdp) or _fit(shape[2], mesh, "data")
+    return P("pipe", None, *rest)
+
+
+def param_specs(params, mesh: Mesh) -> Any:
+    """Specs for the full {"embed","stages","head"} tree."""
+    def embed_spec(path, leaf):
+        # Embedding tables shard on d_model, NOT vocab: a vocab-sharded
+        # gather makes the SPMD partitioner emit a select-style all-reduce
+        # that XLA-CPU's AllReducePromotion cannot clone for bf16 (hard
+        # crash), and on TPU it costs an extra all-reduce of the gathered
+        # activations anyway.  d_model-sharding keeps the gather local.
+        if leaf.ndim == 2:
+            return P(None, _fit(leaf.shape[1], mesh, BATCH)
+                     or _fit(leaf.shape[1], mesh, "data")
+                     or _fit(leaf.shape[1], mesh, "tp"))
+        return P()
+
+    def head_spec(path, leaf):
+        # Head weight [D, V]: vocab over 'tp' only; replicated over data.
+        # The loss-chunk matmul then contracts locally with batch-sharded h
+        # (no collective per chunk; one dw all-reduce per step).  Sharding D
+        # makes every chunk's logits a [B, c, V] all-reduce (~100 GB/step at
+        # 100k vocab); sharding V over 'data' conflicts with the batch
+        # sharding and forces h all-gathers — both measured worse
+        # (EXPERIMENTS.md §Perf iterations 5-6).
+        if leaf.ndim == 2:
+            return P(None, _fit(leaf.shape[1], mesh, "tp"))
+        return P()
+
+    out = {}
+    for top, sub in params.items():
+        if top == "stages":
+            out[top] = jax.tree_util.tree_map_with_path(
+                lambda p, l: stage_param_spec(
+                    tuple(getattr(k, "key", str(k)) for k in p), l, mesh),
+                sub)
+        elif top == "embed":
+            out[top] = jax.tree_util.tree_map_with_path(
+                lambda p, l: embed_spec(p, l), sub)
+        else:
+            out[top] = jax.tree_util.tree_map_with_path(
+                lambda p, l: head_spec(p, l), sub)
+    return out
+
+
+def batch_specs(batch_proto, mesh: Mesh = None) -> Any:
+    def spec(l):
+        if mesh is not None:
+            ax = (_fit(l.shape[0], mesh, BATCH)
+                  or _fit(l.shape[0], mesh, "data"))
+            return P(ax, *([None] * (l.ndim - 1)))
+        return P(BATCH, *([None] * (l.ndim - 1)))
+    return jax.tree.map(spec, batch_proto)
+
+
+def cache_specs(cache_proto, mesh: Mesh, *, seq_shard: bool = False) -> Any:
+    """[n_stages, L, m, mb, ...] resident cache specs."""
+    def spec(leaf):
+        nd = leaf.ndim
+        rest = [None] * (nd - 4)
+        mb = leaf.shape[3] if nd > 3 else 0
+        mb_ax = None
+        if mb and mb % max(_axsize(mesh, BATCH), 1) == 0 and \
+                _axsize(mesh, BATCH) > 1 and not seq_shard:
+            mb_ax = BATCH
+        elif nd >= 6:
+            # shard the slots (sequence) dim over data instead
+            rest[0] = _fit(leaf.shape[4], mesh, "data")
+        if nd >= 7:
+            rest[1] = _fit(leaf.shape[5], mesh, "tp")
+        if nd == 3:                          # e.g. "len": [n, L, m]
+            return P("pipe")
+        return P("pipe", None, None, mb_ax, *rest)
+    return jax.tree.map(spec, cache_proto)
+
+
+def drop_fsdp(spec: P) -> P:
+    """Remove the data/pod (FSDP) axes from a spec, keeping pipe/tp."""
+    def clean(e):
+        if isinstance(e, (tuple, list)):
+            kept = tuple(x for x in e if x not in ("data", "pod"))
+            return kept if kept else None
+        return None if e in ("data", "pod") else e
+    return P(*[clean(e) for e in spec])
+
+
+def gather_stage_weights(stages, mesh: Mesh):
+    """gather_weights_once: constrain stage weights to their un-FSDP'd specs
+    so GSPMD all-gathers them once per step (outside the clock loop) instead
+    of re-gathering every tick; the constraint's transpose reduce-scatters
+    the gradients once on the way out."""
+    import jax.tree_util as jtu
+
+    def one(path, leaf):
+        spec = stage_param_spec(
+            tuple(getattr(k, "key", str(k)) for k in path), leaf, mesh)
+        return jax.lax.with_sharding_constraint(leaf, drop_fsdp(spec))
+    return jtu.tree_map_with_path(one, stages)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(pspecs, opt_state_proto):
+    """Mirror parameter specs onto OptState (step is replicated)."""
+    from repro.optim.optimizers import OptState
+    return OptState(step=P(), mu=pspecs, nu=pspecs, master=pspecs)

@@ -1,0 +1,169 @@
+"""Step builders: train / prefill / serve through the GPipe pipeline.
+
+Each builder returns a pure function ready for ``jax.jit`` plus the sharding
+specs the dry-run / drivers need.  All batch shapes are GLOBAL — GSPMD owns
+the (pod, data, tp) axes; the pipeline shard_map owns ``pipe``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.core.pipeline import (last_stage_output, microbatch, pipeline_call,
+                                 unmicrobatch)
+from repro.launch import sharding
+from repro.models.lm import LMModel
+from repro.optim import optimizers as optim
+
+
+def _carry_proto(model: LMModel, mbg: int, seq: int):
+    return {"h": jax.ShapeDtypeStruct((mbg, seq, model.arch.d_model),
+                                      model.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
+                     shape: ShapeConfig,
+                     ocfg: Optional[optim.OptimizerConfig] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    ocfg = ocfg or optim.OptimizerConfig()
+    consts = model.consts()
+    stage_apply = model.make_stage_apply(consts)
+    mbg = shape.global_batch // pcfg.n_micro
+    pipe = pipeline_call(
+        stage_apply, mesh=mesh, cfg=pcfg, skips=model.skips(),
+        skip_protos=model.skip_protos(mbg, shape.seq_len),
+        carry_proto=_carry_proto(model, mbg, shape.seq_len))
+
+    def loss_fn(params, batch):
+        fresh = model.embed_inputs(params["embed"], batch)
+        inputs_mb = microbatch(fresh, pcfg.n_micro)
+        stages = params["stages"]
+        if pcfg.gather_weights_once:
+            stages = sharding.gather_stage_weights(stages, mesh)
+        outs, _ = pipe(stages, inputs_mb, None)
+        h = unmicrobatch(last_stage_output(outs)["h"])
+        return model.head_loss(params, h, batch["labels"])
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params2, opt2, metrics = optim.apply(ocfg, opt_state, params, grads)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
+                       shape: ShapeConfig):
+    """prefill_step(params, cache, batch) -> (last_token_logits, cache)."""
+    consts = model.consts()
+    stage_apply = model.make_stage_apply(consts, prefill=True)
+    mbg = shape.global_batch // pcfg.n_micro
+    pipe = pipeline_call(
+        stage_apply, mesh=mesh, cfg=pcfg, skips=model.skips(),
+        skip_protos=model.skip_protos(mbg, shape.seq_len),
+        carry_proto=_carry_proto(model, mbg, shape.seq_len))
+
+    def prefill_step(params, cache, batch):
+        fresh = model.embed_inputs(params["embed"], batch)
+        inputs_mb = microbatch(fresh, pcfg.n_micro)
+        outs, cache = pipe(params["stages"], inputs_mb, cache)
+        h = unmicrobatch(last_stage_output(outs)["h"])
+        logits = model.head_logits(params, h[:, -1:, :])
+        return logits, cache
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Decode / serve
+# ---------------------------------------------------------------------------
+
+def build_serve_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
+                     shape: ShapeConfig):
+    """serve_step(params, cache, tokens) -> (logits [B,1,V], cache).
+
+    One decode tick: the request batch is micro-batched through the pipeline
+    exactly like training (the paper's schedule reused for inference)."""
+    consts = model.consts()
+    stage_apply = model.make_stage_apply_decode(consts)
+    mbg = shape.global_batch // pcfg.n_micro
+    pipe = pipeline_call(stage_apply, mesh=mesh, cfg=pcfg,
+                         carry_proto=_carry_proto(model, mbg, 1))
+
+    def serve_step(params, cache, tokens):
+        h = model.embed_decode(params["embed"], tokens, pos=shape.seq_len)
+        inputs_mb = microbatch({"h": h}, pcfg.n_micro)
+        outs, cache = pipe(params["stages"], inputs_mb, cache)
+        h1 = unmicrobatch(last_stage_output(outs)["h"])
+        return model.head_logits(params, h1), cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded jit assembly for a full cell (used by dryrun + drivers)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompiledCell:
+    fn: Callable
+    in_shardings: Tuple
+    abstract_args: Tuple
+    kind: str
+
+
+def abstract_params(model: LMModel):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def build_cell(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
+               shape: ShapeConfig,
+               ocfg: Optional[optim.OptimizerConfig] = None) -> CompiledCell:
+    """Assemble the jit-able step + shardings + abstract args for one cell."""
+    params_p = abstract_params(model)
+    pspecs = sharding.param_specs(params_p, mesh)
+    pshard = sharding.named(pspecs, mesh)
+    batch_p = model.input_specs(shape)
+    bshard = sharding.named(sharding.batch_specs(batch_p, mesh), mesh)
+
+    if shape.kind == "train":
+        step = build_train_step(model, pcfg, mesh, shape, ocfg)
+        opt_p = jax.eval_shape(
+            functools.partial(optim.init, ocfg or optim.OptimizerConfig()),
+            params_p)
+        ospecs = sharding.opt_state_specs(pspecs, opt_p)
+        oshard = sharding.named(ospecs, mesh)
+        return CompiledCell(step, (pshard, oshard, bshard),
+                            (params_p, opt_p, batch_p), "train")
+
+    cache_p = model.cache_protos(shape, pcfg.n_micro)
+    cshard = sharding.named(
+        sharding.cache_specs(cache_p, mesh,
+                             seq_shard=shape.global_batch <
+                             mesh.shape.get("data", 1) *
+                             mesh.shape.get("pod", 1)), mesh)
+    if shape.kind == "prefill":
+        step = build_prefill_step(model, pcfg, mesh, shape)
+        return CompiledCell(step, (pshard, cshard, bshard),
+                            (params_p, cache_p, batch_p), "prefill")
+
+    step = build_serve_step(model, pcfg, mesh, shape)
+    tok_p = batch_p["tokens"]
+    tshard = sharding.named(sharding.batch_specs(tok_p, mesh), mesh)
+    return CompiledCell(step, (pshard, cshard, tshard),
+                        (params_p, cache_p, tok_p), "decode")

@@ -1,0 +1,148 @@
+"""AmoebaNet-D (sequentialized, as the paper's speed benchmark uses).
+
+The paper benchmarks "our implementation of a sequential version of
+AmoebaNet-D in PyTorch" at (L, F) = (18, 256): 18 cells with filter scale F,
+reduction cells at 1/3 and 2/3 depth.  We implement a faithful-in-spirit
+sequential cell: parallel separable-conv 3x3 / 5x5 and avg-pool branches
+summed into the residual stream (the dominant compute pattern of the real
+NAS cell), channel count doubling at each reduction.  What the benchmark
+measures — throughput scaling of a deep conv net under (m, n) pipeline
+configurations — depends on the cell's cost profile, not its exact wiring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balance as balance_lib
+
+
+@dataclass(frozen=True)
+class AmoebaConfig:
+    L: int = 18                 # number of cells (paper: 18)
+    F: int = 256                # filter scale (paper: 256)
+    in_ch: int = 3
+    img: int = 224
+    n_classes: int = 1000
+
+
+def _sep_init(key, cin, cout, k):
+    k1, k2 = jax.random.split(key)
+    return {
+        # depthwise layout under HWIO + feature_group_count=cin: [k,k,1,cin]
+        "dw": (jax.random.normal(k1, (k, k, 1, cin)) * (k * k) ** -0.5),
+        "pw": (jax.random.normal(k2, (1, 1, cin, cout)) * cin ** -0.5),
+    }
+
+
+def _sep_apply(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["dw"], (stride, stride), "SAME", feature_group_count=x.shape[-1],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        y, p["pw"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@dataclass
+class Cell:
+    kind: str       # stem | normal | reduction | head
+    cin: int
+    cout: int
+    res: int
+
+    def param_count(self) -> int:
+        if self.kind == "stem":
+            return 9 * self.cin * self.cout
+        if self.kind == "head":
+            return self.cin * self.cout
+        return (9 + 25) * self.cin + 2 * self.cin * self.cout + 2 * self.cout
+
+    def flops(self) -> float:
+        r = self.res * self.res
+        if self.kind == "stem":
+            return 2.0 * 9 * self.cin * self.cout * r
+        if self.kind == "head":
+            return 2.0 * self.cin * self.cout
+        return 2.0 * r * ((9 + 25) * self.cin + 2 * self.cin * self.cout)
+
+
+class AmoebaNetModel:
+    """Layer-list model compatible with pipeline_hetero."""
+
+    def __init__(self, cfg: AmoebaConfig, n_stages: int):
+        self.cfg = cfg
+        self.layers: List[Cell] = []
+        res = cfg.img // 2
+        ch = cfg.F // 4
+        self.layers.append(Cell("stem", cfg.in_ch, ch, cfg.img))
+        red = {cfg.L // 3, 2 * cfg.L // 3}
+        for i in range(cfg.L):
+            if i in red:
+                self.layers.append(Cell("reduction", ch, ch * 2, res))
+                ch *= 2
+                res //= 2
+            else:
+                self.layers.append(Cell("normal", ch, ch, res))
+        self.layers.append(Cell("head", ch, cfg.n_classes, res))
+        costs = [c.flops() for c in self.layers]
+        self.sizes = balance_lib.block_partition(costs, n_stages)
+        self.bounds = balance_lib.partition_bounds(self.sizes)
+        self.n_stages = n_stages
+
+    def init(self, key):
+        out = []
+        for i, c in enumerate(self.layers):
+            k = jax.random.fold_in(key, i)
+            if c.kind == "stem":
+                out.append({"w": jax.random.normal(k, (3, 3, c.cin, c.cout))
+                            * (9 * c.cin) ** -0.5})
+            elif c.kind == "head":
+                out.append({"w": jax.random.normal(k, (c.cin, c.cout))
+                            * c.cin ** -0.5})
+            else:
+                k3, k5, kp = jax.random.split(k, 3)
+                stride = 2 if c.kind == "reduction" else 1
+                out.append({
+                    "s3": _sep_init(k3, c.cin, c.cout, 3),
+                    "s5": _sep_init(k5, c.cin, c.cout, 5),
+                    "pw": jax.random.normal(kp, (1, 1, c.cin, c.cout))
+                    * c.cin ** -0.5,
+                    "scale": jnp.ones((c.cout,)),
+                })
+        return out
+
+    def layer_apply(self, i: int, p, x, skips: Dict[str, Any]):
+        c = self.layers[i]
+        if c.kind == "stem":
+            return jax.nn.relu(jax.lax.conv_general_dilated(
+                x, p["w"], (2, 2), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")))
+        if c.kind == "head":
+            pooled = x.mean(axis=(1, 2))
+            return pooled @ p["w"]
+        stride = 2 if c.kind == "reduction" else 1
+        b3 = _sep_apply(p["s3"], x, stride)
+        b5 = _sep_apply(p["s5"], x, stride)
+        pool = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+            (1, stride, stride, 1), "SAME")
+        bp = jax.lax.conv_general_dilated(
+            pool, p["pw"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = (b3 + b5 + bp) * p["scale"]
+        if c.kind == "normal":
+            y = y + x
+        return jax.nn.relu(y)
+
+    def apply_sequential(self, params, x):
+        skips: Dict[str, Any] = {}
+        for i, p in enumerate(params):
+            x = self.layer_apply(i, p, x, skips)
+        return x
+
+    def total_params(self) -> int:
+        return sum(c.param_count() for c in self.layers)

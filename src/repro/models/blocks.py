@@ -1,0 +1,418 @@
+"""Per-family transformer blocks: dense / moe / rwkv6 / hybrid / encdec.
+
+Every block family exposes the same four functions so the LM assembly
+(:mod:`repro.models.lm`) and the pipeline stage program stay family-agnostic:
+
+  init(key, arch, dtype)                 -> per-layer params pytree
+  apply(p, h, consts, arch, memory=None) -> h          (train / prefill)
+  decode(p, h, consts, arch, cache, memory_scale)      (one token, cache)
+  cache_proto(arch, batch, max_len)      -> per-layer cache pytree protos
+
+``consts`` is the per-layer constant record sliced from the stacked
+``[n_stages, L_per_stage]`` buffers: identity mask, sliding-window size,
+causal flag, cross-attention flag (see lm.build_consts).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _res(h, mask, delta):
+    """Residual add gated by the identity-padding mask (dtype-preserving)."""
+    return h + (delta.astype(jnp.float32) * mask).astype(h.dtype)
+
+
+def _window_arg(arch: ArchConfig, consts):
+    """Static int window for uniform layouts; traced const for mixed."""
+    a = arch.attn
+    if a is None:
+        return None
+    if a.global_layers:
+        return consts["window"]          # traced per-layer
+    return int(a.window) if a.kind == "swa" else None
+
+
+# ---------------------------------------------------------------------------
+# Dense (smollm / gemma / llama3 / deepseek / pixtral / whisper enc+dec)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, arch: ArchConfig, dtype):
+    ks = jax.random.split(key, 6)
+    out_scale = (2 * (arch.n_layers + arch.enc_layers)) ** -0.5
+    p = {
+        "ln1": L.norm_init(arch.d_model, arch.norm, dtype),
+        "attn": L.attn_init(ks[0], arch.d_model, arch.attn, dtype,
+                            out_scale=out_scale),
+        "ln2": L.norm_init(arch.d_model, arch.norm, dtype),
+        "mlp": L.mlp_init(ks[1], arch.d_model, arch.d_ff, arch.act, dtype,
+                          out_scale=out_scale),
+    }
+    if arch.is_encdec:
+        p["lnx"] = L.norm_init(arch.d_model, arch.norm, dtype)
+        p["xattn"] = L.attn_init(ks[2], arch.d_model, arch.attn, dtype,
+                                 out_scale=out_scale)
+    return p
+
+
+def dense_apply(p, h, consts, arch: ArchConfig, memory=None):
+    a = arch.attn
+    mask = consts["mask"]
+    causal = consts["causal"] if arch.is_encdec else None
+    kv_len = consts.get("attn_len")
+    win = _window_arg(arch, consts)
+    attn = L.attn_apply(p["attn"], L.norm_apply(p["ln1"], h, arch.norm), a,
+                        window=win, causal=causal, kv_len=kv_len)
+    h = _res(h, mask, attn)
+    if arch.is_encdec:
+        x = L.attn_apply(p["xattn"], L.norm_apply(p["lnx"], h, arch.norm), a,
+                         memory=memory, causal=0, kv_len=consts.get("mem_len"))
+        h = _res(h, mask * consts["cross"], x)
+    mlp = L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], h, arch.norm), arch.act)
+    return _res(h, mask, mlp)
+
+
+def dense_decode(p, h, consts, arch: ArchConfig, cache):
+    a = arch.attn
+    mask = consts["mask"]
+    win = int(a.window) if a.kind == "swa" else (
+        None if not a.global_layers else consts["window"])
+    swa = a.kind == "swa" or bool(a.global_layers)
+    attn, cache["self"] = L.attn_decode(
+        p["attn"], L.norm_apply(p["ln1"], h, arch.norm), cache["self"], a,
+        window=(win if swa else None))
+    h = _res(h, mask, attn)
+    if arch.is_encdec:
+        x, _ = L.attn_decode(p["xattn"], L.norm_apply(p["lnx"], h, arch.norm),
+                             cache["cross"], a, cross=True)
+        h = _res(h, mask * consts["cross"], x)
+    mlp = L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], h, arch.norm), arch.act)
+    return _res(h, mask, mlp), cache
+
+
+def dense_cache_proto(arch: ArchConfig, batch: int, max_len: int, dtype):
+    a = arch.attn
+    slots = min(max_len, a.window) if a.kind == "swa" else max_len
+    c = {"self": {
+        "k": jax.ShapeDtypeStruct((batch, slots, a.n_kv_heads, a.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, slots, a.n_kv_heads, a.head_dim), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32)}}
+    if arch.is_encdec:
+        c["cross"] = {
+            "k": jax.ShapeDtypeStruct((batch, arch.enc_len or max_len,
+                                       a.n_kv_heads, a.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((batch, arch.enc_len or max_len,
+                                       a.n_kv_heads, a.head_dim), dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# MoE (mixtral / dbrx): dense attention + routed experts
+# ---------------------------------------------------------------------------
+
+def moe_init(key, arch: ArchConfig, dtype):
+    ks = jax.random.split(key, 2)
+    out_scale = (2 * arch.n_layers) ** -0.5
+    return {
+        "ln1": L.norm_init(arch.d_model, arch.norm, dtype),
+        "attn": L.attn_init(ks[0], arch.d_model, arch.attn, dtype,
+                            out_scale=out_scale),
+        "ln2": L.norm_init(arch.d_model, arch.norm, dtype),
+        "moe": L.moe_init(ks[1], arch.d_model, arch.d_ff, arch.moe, dtype,
+                          out_scale=out_scale),
+    }
+
+
+def moe_apply(p, h, consts, arch: ArchConfig, memory=None):
+    mask = consts["mask"]
+    win = _window_arg(arch, consts)
+    attn = L.attn_apply(p["attn"], L.norm_apply(p["ln1"], h, arch.norm),
+                        arch.attn, window=win)
+    h = _res(h, mask, attn)
+    out, _ = L.moe_apply(p["moe"], L.norm_apply(p["ln2"], h, arch.norm),
+                         arch.moe)
+    return _res(h, mask, out)
+
+
+def moe_decode(p, h, consts, arch: ArchConfig, cache):
+    mask = consts["mask"]
+    a = arch.attn
+    win = int(a.window) if a.kind == "swa" else None
+    attn, cache["self"] = L.attn_decode(
+        p["attn"], L.norm_apply(p["ln1"], h, arch.norm), cache["self"], a,
+        window=win)
+    h = _res(h, mask, attn)
+    out, _ = L.moe_apply(p["moe"], L.norm_apply(p["ln2"], h, arch.norm),
+                         arch.moe, group_size=h.shape[0] * h.shape[1])
+    return _res(h, mask, out), cache
+
+
+moe_cache_proto = dense_cache_proto
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def rwkv_init(key, arch: ArchConfig, dtype):
+    d, f = arch.d_model, arch.d_ff
+    hd = 64
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        "ln1": L.norm_init(d, arch.norm, dtype),
+        "tm": {
+            "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+            "wr": L.dense_init(ks[1], d, d, dtype),
+            "wk": L.dense_init(ks[2], d, d, dtype),
+            "wv": L.dense_init(ks[3], d, d, dtype),
+            "wg": L.dense_init(ks[4], d, d, dtype),
+            "w_base": jnp.zeros((d,), jnp.float32),
+            "ww1": L.dense_init(ks[5], d, lora, dtype),
+            "ww2": L.dense_init(ks[6], lora, d, dtype, 0.1),
+            "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),
+            "gn_scale": jnp.ones((d,), dtype),
+            "wo": L.dense_init(ks[8], d, d, dtype,
+                               (2 * arch.n_layers) ** -0.5),
+        },
+        "ln2": L.norm_init(d, arch.norm, dtype),
+        "cm": {
+            "mu": (jax.random.uniform(ks[9], (2, d)) * 0.5).astype(dtype),
+            "wk": L.dense_init(ks[10], d, f, dtype),
+            "wv": L.dense_init(ks[11], f, d, dtype, (2 * arch.n_layers) ** -0.5),
+            "wr": L.dense_init(ks[0], d, d, dtype),
+        },
+    }
+
+
+def _token_shift(x, last=None):
+    """Previous-token features: shift right by one along S."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix(tm, x, arch: ArchConfig, state0=None, last=None):
+    B, S, D = x.shape
+    hd = 64
+    H = D // hd
+    xs = _token_shift(x, last)
+    mu = tm["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i][None, None] * (xs - x) for i in range(5))
+    r = (xr @ tm["wr"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (xk @ tm["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (xv @ tm["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ tm["wg"])
+    wlog = tm["w_base"][None, None] + jnp.tanh(xw @ tm["ww1"]) @ tm["ww2"]
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))) \
+        .reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    out, state = ops.wkv6(r, k, v, w, tm["u"], state0)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, D)
+    out = ops.rmsnorm(out.astype(x.dtype), tm["gn_scale"])
+    return (out * g.astype(out.dtype)) @ tm["wo"], state, x[:, -1:]
+
+
+def _rwkv_channel_mix(cm, x, last=None):
+    xs = _token_shift(x, last)
+    mu = cm["mu"].astype(x.dtype)
+    xk = x + mu[0][None, None] * (xs - x)
+    xr = x + mu[1][None, None] * (xs - x)
+    k = jnp.square(jax.nn.relu(L.ffn_tp(xk @ cm["wk"])))
+    return jax.nn.sigmoid(xr @ cm["wr"]) * (k @ cm["wv"]), x[:, -1:]
+
+
+def rwkv_apply(p, h, consts, arch: ArchConfig, memory=None):
+    mask = consts["mask"]
+    tmix, _, _ = _rwkv_time_mix(p["tm"], L.norm_apply(p["ln1"], h, arch.norm),
+                                arch)
+    h = _res(h, mask, tmix)
+    cmix, _ = _rwkv_channel_mix(p["cm"], L.norm_apply(p["ln2"], h, arch.norm))
+    return _res(h, mask, cmix)
+
+
+def rwkv_decode(p, h, consts, arch: ArchConfig, cache):
+    mask = consts["mask"]
+    x1 = L.norm_apply(p["ln1"], h, arch.norm)
+    tmix, state, last = _rwkv_time_mix(p["tm"], x1, arch,
+                                       state0=cache["state"],
+                                       last=cache["last_tm"])
+    cache["state"], cache["last_tm"] = state, last
+    h = _res(h, mask, tmix)
+    x2 = L.norm_apply(p["ln2"], h, arch.norm)
+    cmix, last2 = _rwkv_channel_mix(p["cm"], x2, last=cache["last_cm"])
+    cache["last_cm"] = last2
+    return _res(h, mask, cmix), cache
+
+
+def rwkv_cache_proto(arch: ArchConfig, batch: int, max_len: int, dtype):
+    d = arch.d_model
+    hd = 64
+    H = d // hd
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        "last_tm": jax.ShapeDtypeStruct((batch, 1, d), dtype),
+        "last_cm": jax.ShapeDtypeStruct((batch, 1, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (hymba): parallel attention + SSM heads, then MLP
+# ---------------------------------------------------------------------------
+
+def hybrid_init(key, arch: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    out_scale = (2 * arch.n_layers) ** -0.5
+    return {
+        "ln1": L.norm_init(arch.d_model, arch.norm, dtype),
+        "attn": L.attn_init(ks[0], arch.d_model, arch.attn, dtype,
+                            out_scale=out_scale),
+        "ssm": L.ssm_init(ks[1], arch.d_model, arch.ssm, dtype),
+        "ln2": L.norm_init(arch.d_model, arch.norm, dtype),
+        "mlp": L.mlp_init(ks[2], arch.d_model, arch.d_ff, arch.act, dtype,
+                          out_scale=out_scale),
+    }
+
+
+def hybrid_apply(p, h, consts, arch: ArchConfig, memory=None):
+    mask = consts["mask"]
+    x = L.norm_apply(p["ln1"], h, arch.norm)
+    attn = L.attn_apply(p["attn"], x, arch.attn, window=consts["window"])
+    ssm, _ = L.ssm_scan(p["ssm"], x, arch.ssm)
+    h = _res(h, mask, 0.5 * (attn.astype(jnp.float32)
+                             + ssm.astype(jnp.float32)))
+    mlp = L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], h, arch.norm), arch.act)
+    return _res(h, mask, mlp)
+
+
+def hybrid_decode(p, h, consts, arch: ArchConfig, cache):
+    mask = consts["mask"]
+    x = L.norm_apply(p["ln1"], h, arch.norm)
+    attn, cache["self"] = L.attn_decode(p["attn"], x, cache["self"], arch.attn,
+                                        window=consts["window"])
+    ssm, cache["state"] = L.ssm_decode(p["ssm"], x, cache["state"], arch.ssm)
+    h = _res(h, mask, 0.5 * (attn.astype(jnp.float32)
+                             + ssm.astype(jnp.float32)))
+    mlp = L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], h, arch.norm), arch.act)
+    return _res(h, mask, mlp), cache
+
+
+GLOBAL_WINDOW = 32768
+"""Bounded window used for a hybrid arch's 'global' attention layers at
+ultra-long contexts: stacked per-stage caches must be shape-uniform across
+layers, so the few global layers share the SWA ring-cache layout with a much
+larger window.  Exact for contexts <= 32k; an explicit bounded-memory
+approximation beyond (DESIGN.md §4)."""
+
+
+def hybrid_cache_proto(arch: ArchConfig, batch: int, max_len: int, dtype):
+    a = arch.attn
+    s = arch.ssm
+    H = s.n_heads or arch.d_model // s.head_dim
+    slots = min(max_len, max(a.window, GLOBAL_WINDOW) if a.global_layers
+                else (a.window or max_len))
+    return {
+        "self": {
+            "k": jax.ShapeDtypeStruct((batch, slots, a.n_kv_heads, a.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((batch, slots, a.n_kv_heads, a.head_dim), dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)},
+        "state": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.state_dim),
+                                      jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward + cache population
+# ---------------------------------------------------------------------------
+
+def _ring_fill(seq_kv, slots: int):
+    """Place the last min(S, slots) positions of [B, S, H, hd] into ring
+    order: ring[s] holds position p ≡ s (mod slots), the largest such p < S."""
+    S = seq_kv.shape[1]
+    if S <= slots:
+        pad = slots - S
+        return jnp.pad(seq_kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = jnp.arange(slots)
+    p = s + ((S - 1 - s) // slots) * slots
+    return jnp.take(seq_kv, p, axis=1)
+
+
+def _fill_self_cache(p, h_normed, a, cache):
+    B, S, _ = h_normed.shape
+    k = (h_normed @ p["wk"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    v = (h_normed @ p["wv"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    if a.use_rope:
+        k = L.rope(k, jnp.arange(S), a.rope_theta)
+    slots = cache["k"].shape[1]
+    return {"k": _ring_fill(k, slots).astype(cache["k"].dtype),
+            "v": _ring_fill(v, slots).astype(cache["v"].dtype),
+            "len": jnp.asarray(S, jnp.int32)}
+
+
+def dense_prefill(p, h, consts, arch: ArchConfig, cache, memory=None):
+    hn = L.norm_apply(p["ln1"], h, arch.norm)
+    cache["self"] = _fill_self_cache(p["attn"], hn, arch.attn, cache["self"])
+    h2 = dense_apply(p, h, consts, arch, memory=memory)
+    if arch.is_encdec and memory is not None:
+        a = arch.attn
+        Bm, Sm, _ = memory.shape
+        mk = (memory @ p["xattn"]["wk"]).reshape(Bm, Sm, a.n_kv_heads, a.head_dim)
+        mv = (memory @ p["xattn"]["wv"]).reshape(Bm, Sm, a.n_kv_heads, a.head_dim)
+        slots = cache["cross"]["k"].shape[1]
+        cache["cross"] = {"k": _ring_fill(mk, slots).astype(cache["cross"]["k"].dtype),
+                          "v": _ring_fill(mv, slots).astype(cache["cross"]["v"].dtype),
+                          "len": jnp.asarray(Sm, jnp.int32)}
+    return h2, cache
+
+
+def moe_prefill(p, h, consts, arch: ArchConfig, cache, memory=None):
+    hn = L.norm_apply(p["ln1"], h, arch.norm)
+    cache["self"] = _fill_self_cache(p["attn"], hn, arch.attn, cache["self"])
+    return moe_apply(p, h, consts, arch), cache
+
+
+def rwkv_prefill(p, h, consts, arch: ArchConfig, cache, memory=None):
+    mask = consts["mask"]
+    x1 = L.norm_apply(p["ln1"], h, arch.norm)
+    tmix, state, last = _rwkv_time_mix(p["tm"], x1, arch)
+    cache["state"], cache["last_tm"] = state, last.astype(cache["last_tm"].dtype)
+    h = _res(h, mask, tmix)
+    x2 = L.norm_apply(p["ln2"], h, arch.norm)
+    cmix, last2 = _rwkv_channel_mix(p["cm"], x2)
+    cache["last_cm"] = last2.astype(cache["last_cm"].dtype)
+    return _res(h, mask, cmix), cache
+
+
+def hybrid_prefill(p, h, consts, arch: ArchConfig, cache, memory=None):
+    mask = consts["mask"]
+    x = L.norm_apply(p["ln1"], h, arch.norm)
+    cache["self"] = _fill_self_cache(p["attn"], x, arch.attn, cache["self"])
+    attn = L.attn_apply(p["attn"], x, arch.attn, window=consts["window"])
+    ssm, state = L.ssm_scan(p["ssm"], x, arch.ssm)
+    cache["state"] = state
+    h = _res(h, mask, 0.5 * (attn.astype(jnp.float32)
+                             + ssm.astype(jnp.float32)))
+    mlp = L.mlp_apply(p["mlp"], L.norm_apply(p["ln2"], h, arch.norm), arch.act)
+    return _res(h, mask, mlp), cache
+
+
+FAMILIES = {
+    "dense": (dense_init, dense_apply, dense_decode, dense_cache_proto,
+              dense_prefill),
+    "encdec": (dense_init, dense_apply, dense_decode, dense_cache_proto,
+               dense_prefill),
+    "vlm": (dense_init, dense_apply, dense_decode, dense_cache_proto,
+            dense_prefill),
+    "moe": (moe_init, moe_apply, moe_decode, moe_cache_proto, moe_prefill),
+    "ssm": (rwkv_init, rwkv_apply, rwkv_decode, rwkv_cache_proto,
+            rwkv_prefill),
+    "hybrid": (hybrid_init, hybrid_apply, hybrid_decode, hybrid_cache_proto,
+               hybrid_prefill),
+}

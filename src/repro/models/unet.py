@@ -1,0 +1,211 @@
+"""U-Net (paper §4.2.2) as a heterogeneous pipeline program.
+
+Architecture per the paper: 5 down-sampling and 5 up-sampling levels, B
+convolution blocks between samplings, first-conv channels C doubling per
+down level (halving per up level), "rather symmetric than the original
+model ... for effective balancing".  Long skip connections tie each down
+level's output to the matching up level — the paper's portal showcase.
+
+GroupNorm replaces BatchNorm by default (paper §2 footnote 1: micro-batching
+changes BN statistics; GN is micro-batch invariant, so pipelined results are
+exactly sequential).  ``norm="batch"`` opts into the caveat for the tests
+that demonstrate the discrepancy.
+
+The model is expressed as a flat layer list (conv blocks, down, up, fuse)
+with per-layer costs for torchgpipe.balance, then compiled into the
+switch-based heterogeneous stage program (core/stage.py) whose stage
+boundaries carry flat activation buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance as balance_lib
+from repro.core.skip import SkipSpec
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    B: int = 2                 # conv blocks between samplings (paper's B)
+    C: int = 16                # first-conv output channels (paper's C)
+    levels: int = 5
+    in_ch: int = 3
+    out_ch: int = 1
+    img: int = 192
+    norm: str = "group"        # group | batch (paper footnote-1 caveat)
+    groups: int = 4
+
+
+def conv_init(key, cin, cout, k=3, dtype=jnp.float32):
+    w = jax.random.normal(key, (k, k, cin, cout)) * (k * k * cin) ** -0.5
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def conv_apply(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def norm_apply(p, x, cfg: UNetConfig):
+    if cfg.norm == "group":
+        N, H, W, C = x.shape
+        g = min(cfg.groups, C)
+        xg = x.reshape(N, H, W, g, C // g).astype(jnp.float32)
+        mu = xg.mean((1, 2, 4), keepdims=True)
+        var = xg.var((1, 2, 4), keepdims=True)
+        xn = ((xg - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(x.shape)
+    else:                       # "batch": statistics over the micro-batch
+        x32 = x.astype(jnp.float32)
+        mu = x32.mean((0, 1, 2), keepdims=True)
+        var = x32.var((0, 1, 2), keepdims=True)
+        xn = (x32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xn * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+@dataclass
+class Layer:
+    """One pipeline-visible layer of the sequentialized U-Net."""
+    kind: str                  # block | down | up | head
+    cin: int
+    cout: int
+    res: int                   # input spatial resolution
+    skip_out: Optional[str] = None   # stash name (end of a down level)
+    skip_in: Optional[str] = None    # pop name (start of an up level)
+
+    def param_count(self) -> int:
+        k = 9
+        n = k * self.cin * self.cout + 2 * self.cout
+        if self.kind == "up":
+            n += 4 * self.cout * self.cout    # 2x2 transpose conv
+        return n
+
+    def flops(self) -> float:
+        return 2.0 * 9 * self.cin * self.cout * self.res * self.res
+
+
+def build_layers(cfg: UNetConfig) -> List[Layer]:
+    layers: List[Layer] = []
+    res = cfg.img
+    ch = cfg.in_ch
+    enc_ch = []
+    for lvl in range(cfg.levels):
+        cout = cfg.C * (2 ** lvl)
+        for b in range(cfg.B):
+            layers.append(Layer("block", ch, cout, res))
+            ch = cout
+        layers[-1] = dataclasses.replace(layers[-1], skip_out=f"s{lvl}")
+        enc_ch.append(ch)
+        layers.append(Layer("down", ch, cout * 2, res))
+        ch = cout * 2
+        res //= 2
+    for lvl in reversed(range(cfg.levels)):
+        cout = cfg.C * (2 ** lvl)
+        layers.append(Layer("up", ch, cout, res, skip_in=f"s{lvl}"))
+        res *= 2
+        ch = cout + enc_ch[lvl]        # concat with the skip
+        for b in range(cfg.B):
+            layers.append(Layer("block", ch, cout, res))
+            ch = cout
+    layers.append(Layer("head", ch, cfg.out_ch, res))
+    return layers
+
+
+class UNetModel:
+    """Layer list + params + per-layer apply; partitioned by balance."""
+
+    def __init__(self, cfg: UNetConfig, n_stages: int,
+                 balance_by: str = "flops"):
+        self.cfg = cfg
+        self.layers = build_layers(cfg)
+        costs = [l.flops() if balance_by == "flops" else l.param_count()
+                 for l in self.layers]
+        self.sizes = balance_lib.block_partition(costs, n_stages)
+        self.bounds = balance_lib.partition_bounds(self.sizes)
+        self.n_stages = n_stages
+
+    # ------------------------------------------------------------ parameters
+    def init(self, key):
+        params = []
+        for i, l in enumerate(self.layers):
+            k = jax.random.fold_in(key, i)
+            # "up" layers first transpose-conv cin -> cout, then conv
+            # cout -> cout; all other kinds conv cin -> cout.
+            conv_cin = l.cout if l.kind == "up" else l.cin
+            p = {"conv": conv_init(k, conv_cin, l.cout),
+                 "norm": {"scale": jnp.ones((l.cout,), jnp.float32),
+                          "bias": jnp.zeros((l.cout,), jnp.float32)}}
+            if l.kind == "up":
+                p["upconv"] = {
+                    "w": (jax.random.normal(jax.random.fold_in(k, 1),
+                                            (2, 2, l.cin, l.cout))
+                          * (4 * l.cin) ** -0.5),
+                    "b": jnp.zeros((l.cout,))}
+            params.append(p)
+        return params
+
+    # ---------------------------------------------------------- layer apply
+    def layer_apply(self, li: int, p, x, skips: Dict[str, Any]):
+        l = self.layers[li]
+        cfg = self.cfg
+        if l.kind == "block":
+            if l.skip_in:
+                x = jnp.concatenate([x, skips.pop(l.skip_in)], axis=-1)
+            y = jax.nn.relu(norm_apply(p["norm"], conv_apply(p["conv"], x),
+                                       cfg))
+            if l.skip_out:
+                skips[l.skip_out] = y
+            return y
+        if l.kind == "down":
+            y = conv_apply(p["conv"], x, stride=2)
+            return jax.nn.relu(norm_apply(p["norm"], y, cfg))
+        if l.kind == "up":
+            N, H, W, C = x.shape
+            y = jax.lax.conv_transpose(
+                x, p["upconv"]["w"], (2, 2), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y = y + p["upconv"]["b"]
+            y = jax.nn.relu(norm_apply(p["norm"], conv_apply(p["conv"], y),
+                                       cfg))
+            skips[f"__up_{l.skip_in}"] = None   # marker (unused)
+            y = jnp.concatenate([y, skips.pop(l.skip_in)], axis=-1)
+            return y
+        if l.kind == "head":
+            return conv_apply(p["conv"], x)
+        raise ValueError(l.kind)
+
+    def apply_sequential(self, params, x):
+        """Reference forward (no pipeline): exact oracle for tests."""
+        skips: Dict[str, Any] = {}
+        for i, p in enumerate(params):
+            x = self.layer_apply(i, p, x, skips)
+        return x
+
+    # ---------------------------------------------------------- skip routing
+    def skip_edges(self) -> List[SkipSpec]:
+        """Portal edges implied by the stage partition."""
+        stage_of = np.zeros(len(self.layers), int)
+        for s in range(self.n_stages):
+            stage_of[self.bounds[s]:self.bounds[s + 1]] = s
+        edges = []
+        produced = {}
+        for i, l in enumerate(self.layers):
+            if l.skip_out:
+                produced[l.skip_out] = stage_of[i]
+        for i, l in enumerate(self.layers):
+            if l.kind == "up" and l.skip_in in produced:
+                src, dst = produced[l.skip_in], stage_of[i]
+                if dst > src:
+                    edges.append(SkipSpec(l.skip_in, int(src), (int(dst),)))
+        return edges
+
+    def total_params(self) -> int:
+        return sum(l.param_count() for l in self.layers)

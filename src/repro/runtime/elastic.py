@@ -1,0 +1,80 @@
+"""Elastic re-scaling: rebuild the mesh + stage partition when the healthy
+device pool changes.
+
+When a slice is lost (or capacity is added), the framework:
+
+  1. picks the new parallel layout: keep ``tp`` (intra-stage math must stay
+     divisible), shrink/grow ``pipe`` then ``data`` to tile the pool;
+  2. re-balances layers -> stages with core.balance.block_partition for the
+     new pipe degree (the paper's torchgpipe.balance applied elastically);
+  3. restacks the stage parameters [old_n, L_old, ...] -> [new_n, L_new, ...]
+     — pure reshaping of the layer sequence, so a checkpoint written under
+     any layout restores under any other;
+  4. re-jits the step (new mesh/shardings).
+
+Resharding cost is one all-gather of the stage weights; at 1000+-node scale
+this is the slice-replacement path, not the common path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.core import balance as balance_lib
+from repro.core import stage as stage_lib
+
+
+def choose_layout(n_devices: int, old: ParallelConfig,
+                  *, min_data: int = 1) -> ParallelConfig:
+    """Largest layout tiling ``n_devices`` that preserves tp and respects
+    pipe <= old.pipe (stages can merge, never split finer than layers)."""
+    tp = old.tp
+    if n_devices % tp:
+        raise ValueError(f"pool {n_devices} not divisible by tp={tp}")
+    rest = n_devices // tp
+    best = None
+    for pipe in range(min(old.pipe, rest), 0, -1):
+        if rest % pipe:
+            continue
+        data = rest // pipe
+        if data < min_data:
+            continue
+        best = old.with_(pipe=pipe, data=data, pod=1)
+        break
+    if best is None:
+        raise ValueError(f"no layout for {n_devices} devices (tp={tp})")
+    return best
+
+
+def restack_stages(stacked: Any, layer_mask: np.ndarray,
+                   new_n: int) -> Tuple[Any, np.ndarray]:
+    """[old_n, L_old, ...] stage params -> [new_n, L_new, ...].
+
+    Real layers (mask==1) are flattened in order and re-split with identity
+    padding for the new stage count."""
+    old_n, L_old = layer_mask.shape
+    flat_mask = layer_mask.reshape(-1) > 0
+    idx = np.nonzero(flat_mask)[0]
+    n_real = len(idx)
+    L_new, new_mask = stage_lib.pad_layout(n_real, new_n)
+
+    def one(a):
+        flat = a.reshape((old_n * L_old,) + a.shape[2:])
+        real = flat[jnp.asarray(idx)]
+        pad = jnp.zeros((new_n * L_new - n_real,) + real.shape[1:],
+                        real.dtype)
+        return jnp.concatenate([real, pad]).reshape(
+            (new_n, L_new) + real.shape[1:])
+
+    return jax.tree.map(one, stacked), new_mask
+
+
+def rebalance_plan(costs: List[float], new_pipe: int) -> List[int]:
+    """torchgpipe.balance applied to the new stage count."""
+    return balance_lib.block_partition(costs, new_pipe)

@@ -1,0 +1,38 @@
+"""Shared test utilities.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+(assignment requirement).  Multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (see ``run_subprocess``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run ``code`` in a fresh python with N host devices; assert rc == 0."""
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        import sys
+        sys.path.insert(0, {REPO_SRC!r})
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def tmp_ckpt_dir(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("ckpt"))

@@ -1,0 +1,72 @@
+"""torchgpipe.balance analogue: block partition properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance as B
+
+costs_s = st.lists(st.floats(0.01, 100.0), min_size=1, max_size=64)
+
+
+@given(costs_s, st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_partition_contiguous_complete(costs, n):
+    sizes = B.block_partition(costs, n)
+    assert len(sizes) == n
+    assert sum(sizes) == len(costs)
+    assert all(s >= 0 for s in sizes)
+    if len(costs) >= n:
+        assert all(s >= 1 for s in sizes)
+
+
+@given(costs_s, st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_partition_minimax_bound(costs, n):
+    """max block <= sum/n + max element (greedy bound) and is optimal vs
+    brute force on small instances."""
+    sizes = B.block_partition(costs, n)
+    got = B.max_block_cost(costs, sizes)
+    assert got <= sum(costs) / n + max(costs) + 1e-9
+
+
+@given(st.lists(st.floats(0.01, 50.0), min_size=2, max_size=10),
+       st.integers(2, 4))
+@settings(max_examples=60, deadline=None)
+def test_partition_optimal_small(costs, n):
+    """Exhaustive check: no contiguous n-partition beats ours."""
+    if len(costs) < n:
+        return
+    sizes = B.block_partition(costs, n)
+    got = B.max_block_cost(costs, sizes)
+
+    import itertools
+    best = float("inf")
+    L = len(costs)
+    for cuts in itertools.combinations(range(1, L), n - 1):
+        bounds = [0, *cuts, L]
+        m = max(sum(costs[bounds[i]:bounds[i + 1]]) for i in range(n))
+        best = min(best, m)
+    assert got <= best * (1 + 1e-9) + 1e-9
+
+
+def test_balance_by_size():
+    sizes = B.balance_by_size([10, 10, 10, 10], 2)
+    assert sizes == [2, 2]
+    sizes = B.balance_by_size([30, 10, 10, 10], 2)
+    assert sizes == [1, 3]
+
+
+def test_balance_by_flops_profiles_compiled_layers():
+    """The construct-and-run analogue of torchgpipe's profiling pass."""
+    import jax
+    import jax.numpy as jnp
+    big = lambda x: x @ jnp.ones((64, 64)) @ jnp.ones((64, 64))
+    small = lambda x: x @ jnp.ones((64, 64))
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    sizes = B.balance_by_flops([big, small, small], [x, x, x], 2)
+    assert sizes == [1, 2]  # big layer alone; two small layers together
+
+
+def test_fewer_layers_than_stages():
+    sizes = B.block_partition([1.0, 1.0], 4)
+    assert sizes == [1, 1, 0, 0]

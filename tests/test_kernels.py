@@ -1,0 +1,263 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus gradient checks for the blocked VJP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6 import wkv6_pallas
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel sweeps
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # B, Hq, Hkv, Sq, Sk, D
+    (1, 2, 2, 64, 64, 32),
+    (2, 4, 2, 96, 96, 64),      # GQA, non-multiple-of-block seq
+    (1, 8, 1, 128, 128, 32),    # MQA
+    (2, 3, 3, 160, 160, 16),    # odd heads
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+def test_flash_attention_vs_oracle(shape, dtype, causal, window):
+    B, Hq, Hkv, Sq, Sk, D = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, Hq, Sq, D), dtype)
+    k = rand(ks[1], (B, Hkv, Sk, D), dtype)
+    v = rand(ks[2], (B, Hkv, Sk, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.mha_naive(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_q_offset_decodes_prefill_chunk():
+    """q_offset positions a later query chunk against the full key prefix."""
+    B, H, S, D = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (B, H, S, D))
+    k = rand(ks[1], (B, H, S, D))
+    v = rand(ks[2], (B, H, S, D))
+    full = ref.mha_naive(q, k, v, causal=True)
+    half = flash_attention(q[:, :, 64:], k, v, causal=True, q_offset=64,
+                           block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(half), np.asarray(full[:, :, 64:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.sampled_from([32, 48, 96]),
+       st.sampled_from([16, 32]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(b, h, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h * 10 + s + d), 3)
+    q = rand(ks[0], (b, h, s, d))
+    k = rand(ks[1], (b, h, s, d))
+    v = rand(ks[2], (b, h, s, d))
+    got = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    want = ref.mha_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Blocked-jnp attention: custom VJP correctness (the XLA fallback path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True), dict(causal=False), dict(causal=True, window=24),
+    dict(causal=True, kv_len=40),
+])
+def test_blocked_attention_grads_match_naive(kw):
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q, k, v = (rand(ks[i], (B, Hq if i == 0 else Hkv, S, D))
+               for i in range(3))
+    g = rand(ks[3], (B, Hq, S, D))
+
+    def naive(q, k, v):
+        kv_len = kw.get("kv_len")
+        out = ref.mha_naive(q, k, v, causal=kw.get("causal", True),
+                            window=kw.get("window", 0) or 0)
+        if kv_len is not None:
+            out = ref.mha_naive(
+                q, k[:, :, :kv_len], v[:, :, :kv_len],
+                causal=kw.get("causal", True), window=0)
+        return out
+
+    f_b = lambda *a: (ref.mha_blocked(*a, block_k=16, **kw)
+                      .astype(jnp.float32) * g).sum()
+    f_n = lambda *a: (naive(*a).astype(jnp.float32) * g).sum()
+    gb = jax.grad(f_b, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(f_n, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_blocked_attention_traced_mask_params():
+    """window/causal as traced scalars (mixed per-layer layouts)."""
+    B, H, S, D = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(ks[i], (B, H, S, D)) for i in range(3))
+
+    @jax.jit
+    def f(w):
+        return ref.mha_blocked(q, k, v, causal=True, window=w, block_k=16)
+
+    np.testing.assert_allclose(
+        np.asarray(f(jnp.asarray(24))),
+        np.asarray(ref.mha_naive(q, k, v, causal=True, window=24)),
+        rtol=2e-5, atol=2e-5)
+    # window = S  => equals unwindowed
+    np.testing.assert_allclose(
+        np.asarray(f(jnp.asarray(S))),
+        np.asarray(ref.mha_naive(q, k, v, causal=True)),
+        rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 WKV kernel
+# ---------------------------------------------------------------------------
+
+WKV_SHAPES = [
+    # B, H, T, K, V, chunk
+    (1, 1, 64, 8, 8, 16),
+    (2, 3, 128, 16, 16, 32),
+    (1, 2, 96, 32, 32, 32),
+]
+
+
+@pytest.mark.parametrize("shape", WKV_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_vs_oracle(shape, dtype):
+    B, H, T, K, V, C = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    r = rand(ks[0], (B, H, T, K), dtype, 0.5)
+    k = rand(ks[1], (B, H, T, K), dtype, 0.5)
+    v = rand(ks[2], (B, H, T, V), dtype, 0.5)
+    w = jnp.exp(-jnp.exp(rand(ks[3], (B, H, T, K), jnp.float32, 0.5))).astype(dtype)
+    u = rand(ks[4], (H, K), jnp.float32, 0.5)
+    s0 = rand(ks[5], (B, H, K, V), jnp.float32, 0.3)
+    got_o, got_s = wkv6_pallas(r, k, v, w, u, s0, chunk=C, interpret=True)
+    want_o, want_s = ref.wkv6(r, k, v, w, u, s0)
+    tol = 5e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got_o, np.float32),
+                               np.asarray(want_o, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=tol, atol=tol)
+
+
+def test_wkv6_chunked_ref_matches_sequential():
+    B, H, T, K, V = 2, 2, 128, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r, k = rand(ks[0], (B, H, T, K), scale=0.5), rand(ks[1], (B, H, T, K), scale=0.5)
+    v = rand(ks[2], (B, H, T, V), scale=0.5)
+    w = jnp.exp(-jnp.exp(rand(ks[3], (B, H, T, K), scale=0.5)))
+    u = rand(ks[4], (H, K), scale=0.5)
+    o1, s1 = ref.wkv6(r, k, v, w, u)
+    o2, s2 = ref.wkv6_chunked(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_state_chaining():
+    """Processing [0:T/2] then [T/2:T] with carried state == full pass."""
+    B, H, T, K, V = 1, 2, 64, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r, k = rand(ks[0], (B, H, T, K), scale=0.5), rand(ks[1], (B, H, T, K), scale=0.5)
+    v = rand(ks[2], (B, H, T, V), scale=0.5)
+    w = jnp.exp(-jnp.exp(rand(ks[3], (B, H, T, K), scale=0.5)))
+    u = rand(ks[4], (H, K), scale=0.5)
+    o_full, s_full = ref.wkv6(r, k, v, w, u)
+    h = T // 2
+    o1, s1 = wkv6_pallas(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h],
+                         u, chunk=16, interpret=True)
+    o2, s2 = wkv6_pallas(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:],
+                         u, s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(o_full), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode_attend + LSE combine (sequence-sharded long-context decode)
+# ---------------------------------------------------------------------------
+
+def test_decode_attend_matches_full_softmax():
+    B, H, S, D = 2, 3, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(ks[0], (B, H, 1, D))
+    kc = rand(ks[1], (B, H, S, D))
+    vc = rand(ks[2], (B, H, S, D))
+    ln = jnp.full((B,), S, jnp.int32)
+    out, _ = ref.decode_attend(q, kc, vc, ln)
+    want = ref.mha_naive(q, kc, vc, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lse_combine_equals_unsharded():
+    """Partial (num, max, den) triples over sequence shards combine exactly."""
+    B, H, S, D = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rand(ks[0], (B, H, 1, D))
+    kc = rand(ks[1], (B, H, S, D))
+    vc = rand(ks[2], (B, H, S, D))
+    ln = jnp.full((B,), S, jnp.int32)
+    full, _ = ref.decode_attend(q, kc, vc, ln)
+    parts = []
+    for sh in range(4):
+        ksh = kc[:, :, sh * 16:(sh + 1) * 16]
+        vsh = vc[:, :, sh * 16:(sh + 1) * 16]
+        _, part = ref.decode_attend(q, ksh, vsh, jnp.full((B,), 16, jnp.int32))
+        parts.append(part)
+    combined = ref.lse_combine(parts)
+    np.testing.assert_allclose(np.asarray(combined, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rmsnorm():
+    x = rand(jax.random.PRNGKey(6), (4, 32), jnp.bfloat16)
+    s = jnp.ones((32,), jnp.bfloat16) * 2
+    got = ref.rmsnorm(x, s)
+    x32 = np.asarray(x, np.float32)
+    want = x32 / np.sqrt((x32 ** 2).mean(-1, keepdims=True) + 1e-6) * 2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 7, 64), (130, 96), (1, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas_vs_oracle(shape, dtype):
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 2).astype(dtype)
+    s = (jax.random.normal(jax.random.PRNGKey(1), shape[-1:]) + 1).astype(dtype)
+    got = rmsnorm_pallas(x, s, block_rows=32, interpret=True)
+    want = ref.rmsnorm(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

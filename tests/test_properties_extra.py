@@ -1,0 +1,77 @@
+"""Additional property tests on system invariants (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro import configs
+from repro.runtime import elastic
+from repro.runtime.compression import EFCompressor
+from repro.core import stage as stage_lib
+
+
+@given(st.integers(1, 128), st.integers(1, 16))
+@settings(max_examples=80, deadline=None)
+def test_pad_layout_invariants(n_layers, n_stages):
+    L, mask = stage_lib.pad_layout(n_layers, n_stages)
+    assert mask.shape == (n_stages, L)
+    assert int(mask.sum()) == n_layers
+    assert n_stages * L >= n_layers
+    assert n_stages * (L - 1) < max(n_layers, 1) or L == 1
+    flat = mask.reshape(-1)
+    # real layers are a prefix: once padding starts it never stops
+    first_pad = int(flat.argmin()) if (flat == 0).any() else len(flat)
+    assert flat[:first_pad].all() and not flat[first_pad:].any()
+
+
+@given(st.integers(1, 8).map(lambda k: 2 ** k),
+       st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=60, deadline=None)
+def test_choose_layout_tiles_pool(pool_pow, tp, old_pipe):
+    pool = pool_pow * tp
+    old = ParallelConfig(pipe=old_pipe, tp=tp, data=16, pod=1)
+    new = elastic.choose_layout(pool, old)
+    assert new.pipe * new.data * new.tp == pool
+    assert new.tp == tp
+    assert new.pipe <= old.pipe
+
+
+@given(st.integers(0, 10), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_data_tokens_within_vocab(step, vocab):
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    ds = SyntheticLM(DataConfig(seed=1, vocab=vocab, seq_len=16,
+                                global_batch=2))
+    b = ds.batch_at(step)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < vocab
+    assert b["labels"].min() >= 0 and b["labels"].max() < vocab
+
+
+@given(st.lists(st.floats(-10, 10), min_size=1, max_size=300),
+       st.sampled_from([16, 64, 256]))
+@settings(max_examples=40, deadline=None)
+def test_compression_residual_identity(vals, block):
+    """quantized + residual == original, exactly (fp32)."""
+    comp = EFCompressor(block=block)
+    g = {"w": jnp.asarray(np.array(vals, np.float32))}
+    ef = comp.init_state(g)
+    out, ef2 = comp.compress_reduce(g, ef)
+    np.testing.assert_allclose(np.asarray(out["w"] + ef2["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+
+
+@given(st.sampled_from(configs.ARCH_NAMES),
+       st.sampled_from(["train_4k", "prefill_32k", "decode_32k"]),
+       st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_derived_n_micro_always_legal(arch_name, shape_name, multi_pod):
+    from repro.configs.base import SHAPES_BY_NAME
+    pcfg = configs.get_parallel(arch_name).with_(pod=2 if multi_pod else 1)
+    shape = SHAPES_BY_NAME[shape_name]
+    m = configs.derive_n_micro(shape, pcfg)
+    dp = pcfg.data * pcfg.pod * pcfg.dp2
+    assert shape.global_batch % m == 0
+    assert (shape.global_batch // m) % dp == 0 or shape.global_batch < dp
+    assert 1 <= m <= shape.global_batch

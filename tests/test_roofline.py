@@ -1,0 +1,101 @@
+"""Roofline HLO analysis: shape parsing, trip-count recovery, dot FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis as A
+
+
+def test_shape_bytes():
+    assert A.shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert A.shape_bytes("f32[8]") == 32
+    assert A.shape_bytes("(f32[4,4]{1,0}, s32[2])") == 64 + 8
+    assert A.shape_bytes("pred[]") == 1
+
+
+def test_trip_count_correction_on_scan():
+    """XLA counts while bodies once; the analyzer must multiply by the trip
+    count recovered from the loop condition."""
+    D, T = 64, 10
+
+    def scanned(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((T, D, D), jnp.float32)
+    compiled = jax.jit(scanned).lower(x, ws).compile()
+    xla_flops = compiled.cost_analysis()["flops"]
+    cost = A.analyze_hlo(compiled.as_text(), 1)
+    expect_dot = 2 * 32 * D * D * T
+    # XLA undercounts by ~T; ours is within 1% of analytic
+    assert xla_flops < expect_dot / 2
+    assert abs(cost.flops - expect_dot) / expect_dot < 0.01
+
+
+def test_nested_scan_multipliers():
+    D, T1, T2 = 32, 5, 7
+
+    def inner(x, ws):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    def outer(x, ws):
+        def body(x, _):
+            return inner(x, ws), None
+        return jax.lax.scan(body, x, jnp.arange(T1))[0]
+
+    x = jax.ShapeDtypeStruct((8, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((T2, D, D), jnp.float32)
+    compiled = jax.jit(outer).lower(x, ws).compile()
+    cost = A.analyze_hlo(compiled.as_text(), 1)
+    expect = 2 * 8 * D * D * T1 * T2
+    assert abs(cost.flops - expect) / expect < 0.02
+
+
+def test_dot_flops_contraction_dim():
+    ins = A.Instr("d", "f32[16,32]", "dot",
+                  "%d = f32[16,32]{1,0} dot(%a, %b), lhs_contracting_dims={1},"
+                  " rhs_contracting_dims={0}")
+    symtab = {"a": "f32[16,64]", "b": "f32[64,32]"}
+    assert A._dot_flops(ins, symtab) == 2 * 16 * 32 * 64
+
+
+def test_vmem_score_rule():
+    assert A._is_vmem_score("f32[15,4096,512]{2,1,0}")       # score block
+    assert not A._is_vmem_score("bf16[15,4096,512]")         # bf16 => data
+    assert not A._is_vmem_score("f32[4096,960]")             # 2-dim weight
+    assert not A._is_vmem_score("f32[256,512,49152]")        # logits (big last)
+
+
+def test_collective_ring_factors():
+    c = A.Collective = None  # module keeps no Collective class anymore
+    # ring factors via analyze on a synthetic line set
+    hlo = """
+HloModule m, num_partitions=4
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = f32[64]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    cost = A.analyze_hlo(hlo, 4)
+    assert cost.coll_link_bytes["all-reduce"] == pytest.approx(
+        2 * 256 * 3 / 4)
+    assert cost.coll_link_bytes["collective-permute"] == 256
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro import configs
+    from repro.configs.base import TRAIN_4K
+    mix = configs.get_arch("mixtral-8x7b")
+    dense_equiv = mix.total_params()
+    active = mix.active_params_per_token()
+    assert active < dense_equiv / 2          # top-2 of 8 experts
+    f = A.model_flops_for(mix, TRAIN_4K)
+    assert f == pytest.approx(6.0 * active * 256 * 4096)

@@ -1,0 +1,90 @@
+"""Schedule properties: Algorithm 1 (deterministic clock-cycle), GPipe
+forward+backward ordering, 1F1B, bubble fractions, stash bounds."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as S
+
+mn = st.tuples(st.integers(1, 24), st.integers(1, 12))
+
+
+@given(mn)
+@settings(max_examples=60, deadline=None)
+def test_clock_cycle_is_algorithm_1(m_n):
+    """Tick k runs exactly the tasks F[i,j] with i + j == k (paper Alg. 1)."""
+    m, n = m_n
+    ticks = list(S.clock_cycles(m, n))
+    assert len(ticks) == m + n - 1
+    seen = set()
+    for k, tick in enumerate(ticks):
+        for t in tick:
+            assert t.kind == "F"
+            assert t.micro + t.stage == k
+            assert 0 <= t.micro < m and 0 <= t.stage < n
+            seen.add((t.micro, t.stage))
+    assert len(seen) == m * n
+
+
+@given(mn, st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_gpipe_schedule_valid(m_n, recompute_last):
+    m, n = m_n
+    table = S.gpipe_schedule(m, n, checkpoint=True,
+                             recompute_last_micro=recompute_last)
+    S.validate(table, m, n, checkpoint=True,
+               recompute_last_micro=recompute_last)
+
+
+@given(mn)
+@settings(max_examples=40, deadline=None)
+def test_1f1b_schedule_valid(m_n):
+    m, n = m_n
+    table = S.one_f_one_b_schedule(m, n)
+    # 1F1B reorders backwards across micro-batches by design
+    S.validate(table, m, n, checkpoint=False, backward_micro_order=False)
+
+
+@given(mn)
+@settings(max_examples=40, deadline=None)
+def test_1f1b_stash_bound(m_n):
+    """1F1B bounds live activations per stage by min(n - j, m); GPipe
+    stashes the full m on every stage — the paper's memory motivation."""
+    m, n = m_n
+    peak_1f1b = S.peak_stash(S.one_f_one_b_schedule(m, n), n, m)
+    peak_gpipe = S.peak_stash(S.gpipe_schedule(m, n, checkpoint=False), n, m)
+    for j in range(n):
+        assert peak_1f1b[j] <= min(n - j, m)
+        assert peak_gpipe[j] == m
+        assert peak_1f1b[j] <= peak_gpipe[j]
+
+
+def test_last_microbatch_recompute_elided():
+    """Paper §2.1: F'_{m,j} is unnecessary and omitted by default."""
+    m, n = 4, 3
+    table = S.gpipe_schedule(m, n, checkpoint=True)
+    recs = [t for tick in table for t in tick if t.kind == "R"]
+    assert all(t.micro != m - 1 for t in recs)
+    assert len(recs) == (m - 1) * n
+    # footnote 5: m=1 with forced recompute => checkpointing still applies
+    table1 = S.gpipe_schedule(1, n, checkpoint=True,
+                              recompute_last_micro=True)
+    recs1 = [t for tick in table1 for t in tick if t.kind == "R"]
+    assert len(recs1) == n
+
+
+def test_bubble_fraction():
+    assert S.bubble_fraction(1, 1) == 0.0
+    assert S.bubble_fraction(4, 3) == pytest.approx(2 / 6)
+    # GPipe guidance: m >= 4n keeps bubble under 20%
+    assert S.bubble_fraction(4 * 8, 8) < 0.2
+
+
+@given(mn)
+@settings(max_examples=30, deadline=None)
+def test_backward_is_reverse_clock_cycle(m_n):
+    """The autodiff-induced backward runs B[i,j] at reverse tick
+    (m-1-i)+(n-1-j) — the mirror of Algorithm 1 (paper Fig. 2)."""
+    m, n = m_n
+    for k, tick in enumerate(S.gpipe_backward_cycles(m, n, checkpoint=False)):
+        for t in tick:
+            assert (m - 1 - t.micro) + (n - 1 - t.stage) == k
