@@ -20,6 +20,7 @@ import json
 BENCH = """
 import time, json
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.unet import UNetConfig, UNetModel
@@ -45,7 +46,7 @@ for name, kw in [
                           (B_GLOBAL, cfg.img, cfg.img, cfg.out_ch))
     prog = PH.build_hetero_program(model, params,
                                    B_GLOBAL // pcfg.n_micro, pcfg, x[:2])
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def loss(p, xx, yy):
             import repro.models.pipeline_hetero as P2
             prog2 = PH.HeteroProgram(p, prog.stage_apply, prog.carry_proto,

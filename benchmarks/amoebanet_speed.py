@@ -23,6 +23,7 @@ def _schedule_time(costs, sizes, m, remat=True):
     return (m + n - 1) / m * per_tick
 _m.schedule_time = _schedule_time
 sys.modules["benchmarks_schedule_model"] = _m
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.amoebanet import AmoebaConfig, AmoebaNetModel
@@ -39,7 +40,7 @@ params = model.init(jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (B_GLOBAL, cfg.img, cfg.img, 3))
 labels = jax.random.randint(jax.random.PRNGKey(2), (B_GLOBAL,), 0, 100)
 prog = PH.build_hetero_program(model, params, B_GLOBAL // m, pcfg, x[:2])
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     def loss(p, xx, yy):
         prog2 = PH.HeteroProgram(p, prog.stage_apply, prog.carry_proto,
                                  prog.skips, prog.skip_protos, prog.out_proto)

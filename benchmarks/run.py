@@ -25,16 +25,22 @@ def main() -> None:
                     help="reduced grids (default: full paper grids)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: ablation,amoebanet,"
-                         "unet_memory,unet_speed,roofline")
+                         "unet_memory,unet_speed,roofline,schedules")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (ablation_components, amoebanet_speed,
-                            roofline_table, unet_memory, unet_speed)
+                            roofline_table, schedules_bench, unet_memory,
+                            unet_speed)
 
     def want(name):
         return only is None or name in only
 
+    if want("schedules"):
+        print("# Schedules: GPipe vs 1F1B step time + activation stash"
+              " (-> BENCH_schedules.json)")
+        grid = ((2, 4),) if args.fast else ((2, 4), (4, 8))
+        _safe(lambda: schedules_bench.main(grid=grid))
     if want("ablation"):
         print("# Table 1: optimization components (U-Net, n=4, m=8)")
         _safe(ablation_components.main)

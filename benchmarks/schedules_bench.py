@@ -1,0 +1,107 @@
+"""Schedule A/B benchmark: GPipe vs 1F1B step time + peak activation bytes.
+
+Runs the fused scheduler (``schedule="gpipe_tasked"`` vs ``"1f1b"``) and the
+legacy autodiff path (``"gpipe"``) on real multi-device pipelines (XLA host
+devices, reduced model — CPU is the runtime, TPU the target) and emits a
+machine-readable ``BENCH_schedules.json`` so the perf trajectory has a
+baseline:
+
+* ``us_per_step`` — measured wall-clock per train step (single physical
+  core: pipeline parallelism cannot show wall-clock speedup here; the
+  numbers baseline *relative* schedule cost, not hardware throughput).
+* ``stash_depth`` / ``per_stage_stash`` — the plan-derived activation stash
+  (number of live micro-batch boundary activations per stage).
+* ``peak_activation_bytes`` — stash_depth x bytes(one boundary activation),
+  the structural per-device stash footprint.  1F1B's bound is
+  ``min(n - j, m)`` vs GPipe's ``m`` (paper §2.1's motivation, realized
+  beyond-paper).
+"""
+import json
+import os
+
+from benchmarks.util import run_with_devices
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "BENCH_schedules.json")
+
+BENCH = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.compat import set_mesh
+from repro.configs.base import ShapeConfig, ParallelConfig
+from repro.core import plan as plan_lib
+from repro.launch import mesh as mesh_lib, steps
+from repro.models.lm import LMModel
+from repro.optim import optimizers as optim
+
+arch = configs.smoke_arch("smollm-360m")
+shape = ShapeConfig("t", seq_len=32, global_batch={batch}, kind="train")
+key = jax.random.PRNGKey(0)
+rows = []
+for pipe, m in {grid}:
+    for schedule in ("gpipe", "gpipe_tasked", "1f1b"):
+        pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
+                              remat="full", schedule=schedule)
+        mesh = mesh_lib.make_smoke_mesh(pcfg)
+        model = LMModel(arch, pcfg, dtype=jnp.float32)
+        params = model.init(key)
+        ocfg = optim.OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=8)
+        opt = optim.init(ocfg, params)
+        batch = {{k: jax.random.randint(key, v.shape, 0, arch.vocab)
+                 for k, v in model.input_specs(shape).items()}}
+        mbg = shape.global_batch // m
+        carry_bytes = mbg * shape.seq_len * arch.d_model * 4   # f32 boundary
+        if schedule == "gpipe":
+            depth, per_stage = m, [m] * pipe   # autodiff stashes every micro
+        else:
+            tplan = plan_lib.plan_for(schedule, m, pipe)
+            depth, per_stage = tplan.stash_depth, list(tplan.per_stage_stash)
+        with set_mesh(mesh):
+            step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape,
+                                                  ocfg))
+            p, o, mt = step(params, opt, batch)      # compile + warm
+            jax.block_until_ready(mt["loss"])
+            iters = 3
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                p, o, mt = step(p, o, batch)
+            jax.block_until_ready(mt["loss"])
+            dt = (time.perf_counter() - t0) / iters
+        rows.append(dict(
+            schedule=schedule, pipe=pipe, n_micro=m,
+            us_per_step=round(dt * 1e6, 1),
+            loss=float(mt["loss"]),
+            stash_depth=depth, per_stage_stash=per_stage,
+            peak_activation_bytes=depth * carry_bytes,
+            carry_bytes_per_micro=carry_bytes))
+print("JSON" + json.dumps(rows))
+"""
+
+
+def main(grid=((2, 4), (4, 8)), batch=16, n_devices=8):
+    out = run_with_devices(BENCH.format(grid=tuple(grid), batch=batch),
+                           n_devices=n_devices, timeout=2400)
+    rows = json.loads(out.split("JSON", 1)[1])
+    report = {"bench": "schedules", "arch": "smollm-360m(smoke)",
+              "rows": rows}
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=2)
+    for r in rows:
+        print(f"schedule_{r['schedule']}_p{r['pipe']}_m{r['n_micro']},"
+              f"{r['us_per_step']},stash={r['stash_depth']}"
+              f",act_bytes={r['peak_activation_bytes']}")
+    # sanity: the 1F1B memory bound must hold in every emitted row
+    by_key = {(r["pipe"], r["n_micro"], r["schedule"]): r for r in rows}
+    for (pipe, m, s), r in by_key.items():
+        if s == "1f1b":
+            g = by_key[(pipe, m, "gpipe_tasked")]
+            assert r["peak_activation_bytes"] <= g["peak_activation_bytes"]
+            assert all(r["per_stage_stash"][j] <= min(pipe - j, m)
+                       for j in range(pipe))
+    print(f"# wrote {OUT}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import json
 BENCH = """
 import json
 import jax, jax.numpy as jnp
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.unet import UNetConfig, UNetModel
@@ -37,7 +38,7 @@ for (B, C) in {ladder}:
         prog = PH.build_hetero_program(model, params, 32 // 8, pcfg,
                                        jax.ShapeDtypeStruct((4, 96, 96, 3),
                                                             jnp.float32))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             def loss(p, xx, yy):
                 prog2 = PH.HeteroProgram(p, prog.stage_apply,
                                          prog.carry_proto, prog.skips,

@@ -26,6 +26,7 @@ def _sequential_time(costs, m):
 _m.schedule_time = _schedule_time
 _m.sequential_time = _sequential_time
 sys.modules["benchmarks_schedule_model"] = _m
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.unet import UNetConfig, UNetModel
@@ -42,7 +43,7 @@ params = model.init(jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (B_GLOBAL, cfg.img, cfg.img, 3))
 y = jax.random.normal(jax.random.PRNGKey(2), (B_GLOBAL, cfg.img, cfg.img, 1))
 prog = PH.build_hetero_program(model, params, B_GLOBAL // m, pcfg, x[:2])
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     def loss(p, xx, yy):
         prog2 = PH.HeteroProgram(p, prog.stage_apply, prog.carry_proto,
                                  prog.skips, prog.skip_protos, prog.out_proto)

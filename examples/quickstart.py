@@ -10,6 +10,7 @@ repro/launch/dryrun.py).
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -31,7 +32,7 @@ def main():
     data = SyntheticLM(DataConfig(vocab=arch.vocab, seq_len=32,
                                   global_batch=8))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         train_step = jax.jit(
             steps.build_train_step(model, pcfg, mesh, shape, ocfg))
         for i in range(10):

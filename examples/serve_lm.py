@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig
 from repro.launch import mesh as mesh_lib, steps
@@ -37,7 +38,7 @@ def main():
     pshape = ShapeConfig("p", args.prompt_len, args.batch, "prefill")
     dshape = ShapeConfig("d", args.prompt_len + args.gen, args.batch,
                          "decode")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         prefill = jax.jit(steps.build_prefill_step(model, pcfg, mesh, pshape))
         decode = jax.jit(steps.build_serve_step(model, pcfg, mesh, dshape))
         cache = model.init_cache(dshape, pcfg.n_micro, filled=False)

@@ -16,6 +16,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig, AttentionConfig, ParallelConfig, ShapeConfig
@@ -54,7 +55,7 @@ def main():
           f"{pcfg.pipe} pipeline stages x {pcfg.data}-way data parallel, "
           f"m={pcfg.n_micro} micro-batches")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jstep = jax.jit(steps.build_train_step(model, pcfg, mesh, shape, ocfg))
 
     def make_state(restored):
@@ -65,7 +66,7 @@ def main():
 
     def step_fn(state, i):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p, o, m = jstep(state["params"], state["opt"], batch)
         if i % 10 == 0:
             print(f"step {i:4d}  loss {float(m['loss']):.4f}  "

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models import pipeline_hetero as PH
@@ -33,7 +34,7 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         prog = PH.build_hetero_program(model, params, 8 // pcfg.n_micro,
                                        pcfg, x[:2])
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fwd = jax.jit(lambda xx: PH.hetero_forward(prog, mesh, pcfg, xx))
             y = fwd(x)
             cost = RA.analyze_hlo(fwd.lower(x).compile().as_text(), mesh.size)

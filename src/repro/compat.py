@@ -1,0 +1,175 @@
+"""JAX version compatibility shims.
+
+The repo targets the current jax API (``jax.shard_map`` with ``axis_names``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.sharding
+.get_abstract_mesh``) but must also run on jax 0.4.x (the CI pin and the
+container toolchain).  Every call site imports the symbols from here instead
+of probing jax itself, so the degradation story lives in exactly one module:
+
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., axis_names=...,
+  check_vma=False)`` — new-style keyword interface.  On 0.4.x it lowers to
+  ``jax.experimental.shard_map.shard_map`` where the *manual* axis set is
+  expressed inversely via ``auto = all_axes - axis_names`` and ``check_vma``
+  is spelled ``check_rep``.
+* ``set_mesh(mesh)`` — context manager.  On 0.4.x the legacy
+  ``with mesh:`` thread-resources context provides the same "bare
+  PartitionSpec resolves against the ambient mesh" behaviour.
+* ``get_abstract_mesh()`` — returns the ambient (abstract) mesh or ``None``.
+  On 0.4.x we return the legacy physical mesh from thread resources (or
+  ``None`` when empty), which exposes the same ``.axis_names`` / ``.shape``
+  surface the callers use.
+* ``AxisType`` / ``make_mesh`` — explicit axis types landed after 0.4.x;
+  the fallback enum is accepted (and ignored) by ``make_mesh``.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+
+import numpy as np
+
+import jax
+
+JAX_HAS_NEW_API = hasattr(jax, "shard_map")
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def manual_region():
+    """Mark (at trace time) that we are inside a manual shard_map body.
+
+    jax 0.4.x's partial-auto partitioner aborts (``Check failed:
+    sharding.IsManualSubgroup()``) on ``with_sharding_constraint`` over the
+    *auto* axes while inside a manual region; the constraints are layout
+    hints, so on old jax we simply skip them there.
+    """
+    prev = getattr(_TLS, "manual", False)
+    _TLS.manual = True
+    try:
+        yield
+    finally:
+        _TLS.manual = prev
+
+
+def skip_constraints() -> bool:
+    """True when sharding constraints must be elided (old jax, manual body)."""
+    return not JAX_HAS_NEW_API and getattr(_TLS, "manual", False)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on new jax, a one-element
+    list of dicts on 0.4.x."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+# --------------------------------------------------------------------- AxisType
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.5
+except ImportError:  # jax 0.4.x: explicit axis types don't exist; every
+    class AxisType(enum.Enum):         # axis behaves as Auto under GSPMD.
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# -------------------------------------------------------------------- make_mesh
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates the missing ``axis_types`` kwarg."""
+    if JAX_HAS_NEW_API:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types,
+                             devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def mesh_with_axis_types(devices: np.ndarray, axis_names, axis_types=None):
+    """Construct ``jax.sharding.Mesh`` with axis_types when supported."""
+    from jax.sharding import Mesh
+    if JAX_HAS_NEW_API and axis_types is not None:
+        return Mesh(devices, axis_names, axis_types=axis_types)
+    return Mesh(devices, axis_names)
+
+
+# -------------------------------------------------------------------- shard_map
+
+if JAX_HAS_NEW_API:
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = True):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = True):
+        if axis_names is None:
+            auto = frozenset()
+        else:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map_04(f, mesh, in_specs, out_specs,
+                             check_rep=check_vma, auto=auto)
+
+
+# --------------------------------------------------------------------- set_mesh
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):
+    set_mesh = jax.sharding.use_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # Legacy thread-resources mesh context: bare PartitionSpecs in
+        # with_sharding_constraint / jit resolve against ``mesh``.
+        with mesh:
+            yield mesh
+
+
+# ------------------------------------------------------ pallas compiler params
+
+def pallas_compiler_params():
+    """TPU pallas CompilerParams class (named TPUCompilerParams on 0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+# ------------------------------------------------------- optimization_barrier
+
+if JAX_HAS_NEW_API:
+    optimization_barrier = jax.lax.optimization_barrier
+else:
+    # 0.4.x ships the primitive without a differentiation rule; mirror the
+    # later-jax behaviour (barrier the cotangents too) via custom_vjp.
+    @jax.custom_vjp
+    def optimization_barrier(xs):
+        return jax.lax.optimization_barrier(xs)
+
+    def _ob_fwd(xs):
+        return optimization_barrier(xs), None
+
+    def _ob_bwd(_, cts):
+        return (jax.lax.optimization_barrier(cts),)
+
+    optimization_barrier.defvjp(_ob_fwd, _ob_bwd)
+
+
+# ------------------------------------------------------------ get_abstract_mesh
+
+def get_abstract_mesh():
+    """Ambient mesh (abstract on new jax, physical on 0.4.x) or ``None``."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh

@@ -157,7 +157,20 @@ class ParallelConfig:
     n_micro: int = 8
     microbatch: int = 0           # 0 = derive from global_batch
     dp2: int = 1                  # surplus model-axis folded into extra DP
-    schedule: str = "gpipe"       # gpipe | 1f1b | seq
+    schedule: str = "gpipe"       # execution order of the tick loop:
+    #   "gpipe"        — fill/drain forward, autodiff-induced reverse
+    #                    clock-cycle backward (paper Algorithm 1);
+    #   "gpipe_tasked" — the same task table, but executed by the fused
+    #                    scheduler (explicit-VJP backwards in the loop);
+    #   "1f1b"         — PipeDream-flush: same synchronous semantics, each
+    #                    stage drains backwards early, bounding stashed
+    #                    activations at min(n - j, m) instead of m.
+    grad_reduce: str = "ordered"  # fused-scheduler cotangent folding:
+    #   "ordered" — per-micro slots + fixed-order sum: gradients are
+    #               bitwise-identical across schedules (costs m x stage-
+    #               param memory for the slots);
+    #   "running" — fold in schedule order: O(1) memory, bit-exact only
+    #               against itself.
     remat: str = "full"           # none | full | dots
     remat_layers: bool = False    # nested checkpointing: remat each layer
     #   inside the stage as well, so a backward tick stashes only bf16

@@ -29,11 +29,13 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ParallelConfig
 from repro.core import checkpointing
+from repro.core import plan as plan_lib
 from repro.core.skip import SkipSpec, portal_sends, ring_init, ring_push, ring_read
 
 PIPE_AXIS = "pipe"
@@ -69,6 +71,14 @@ def _shift_chain(value, n: int, axis: str):
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
 
 
+def _shift_chain_rev(value, n: int, axis: str):
+    """Backward (cotangent) hop: rank j -> j-1 (rank n-1 receives zeros)."""
+    if n == 1:
+        return jax.tree.map(jnp.zeros_like, value)
+    perm = [(i, i - 1) for i in range(1, n)]
+    return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
+
+
 BATCH_AXES = ("pod", "data")
 
 
@@ -80,7 +90,9 @@ def _constrain_batch0(tree, *, lead: int = 0):
     from jnp.zeros — without these constraints every carry is replicated
     over the data axis and per-device memory blows up by |data|x.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    if compat.skip_constraints():
+        return tree
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or not set(BATCH_AXES) <= set(mesh.axis_names):
         return tree
 
@@ -104,7 +116,7 @@ def _barrier(*trees):
     leaves = [l for f in flat for l in f]
     if not leaves:
         return trees
-    out = jax.lax.optimization_barrier(tuple(leaves))
+    out = compat.optimization_barrier(tuple(leaves))
     res, k = [], 0
     for f, td in zip(flat, tds):
         res.append(jax.tree_util.tree_unflatten(td, out[k:k + len(f)]))
@@ -125,7 +137,8 @@ def run_pipeline(stage_apply: StageApplyFn,
                  skip_protos: Optional[Dict[str, Any]] = None,
                  resident=None,
                  carry_proto=None,
-                 axis: str = PIPE_AXIS):
+                 axis: str = PIPE_AXIS,
+                 rank=None):
     """Execute the GPipe schedule for one mini-batch.
 
     Args:
@@ -146,7 +159,13 @@ def run_pipeline(stage_apply: StageApplyFn,
     n, m = cfg.pipe, cfg.n_micro
     T = m + n - 1
     # pipe == 1 runs outside shard_map (see pipeline_call): no axis to index.
-    idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
+    # ``rank`` (a P(pipe)-sharded iota slice) replaces jax.lax.axis_index:
+    # the raw partition-id op it lowers to is rejected by 0.4.x's
+    # partial-auto partitioner, while a sharded input works everywhere.
+    if rank is not None:
+        idx = rank
+    else:
+        idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
     skip_protos = skip_protos or {}
     resident = {} if resident is None else resident
 
@@ -170,7 +189,18 @@ def run_pipeline(stage_apply: StageApplyFn,
     k = m // n if streaming else 0   # micro-batches per rank (validated in
     #                                  pipeline_call: m % n == 0)
 
-    def tick_body(state, comms, outputs, resident, t, stream_buf=None):
+    # The tick loop is generated from the validated clock-cycle task table
+    # (schedules.clock_cycles, paper Algorithm 1) rather than inline
+    # ``F_{t-j,j}`` arithmetic: micro/valid per (tick, rank) are plan
+    # constants.  Forward-only execution is schedule-invariant — a
+    # flush-synchronous 1F1B has the identical forward wavefront; the
+    # schedules only diverge once backwards interleave (run_pipeline_tasks).
+    fplan = plan_lib.lower_forward(m, n)
+    fp_micro = jnp.asarray(fplan.micro)
+    fp_valid = jnp.asarray(fplan.valid)
+
+    def tick_body(state, comms, outputs, resident, t, micro_row, valid_row,
+                  stream_buf=None):
         state = _constrain_batch0(state)
         outputs = _constrain_batch0(outputs, lead=1)
         if streaming:
@@ -181,12 +211,13 @@ def run_pipeline(stage_apply: StageApplyFn,
                     a, jnp.clip(t // n, 0, k - 1), 0, keepdims=False),
                 stream_buf)
         else:
+            # micro_row[0] == min(t, m-1): stage 0's plan entry; other ranks
+            # ignore ``fresh`` (their stage_apply selects the carry).
             fresh = _constrain_batch0(jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(
-                    a, jnp.minimum(t, m - 1), 0, keepdims=False), inputs_mb))
-        micro_raw = t - idx
-        valid = jnp.logical_and(micro_raw >= 0, micro_raw < m)
-        micro = jnp.clip(micro_raw, 0, m - 1)
+                    a, micro_row[0], 0, keepdims=False), inputs_mb))
+        micro = micro_row[idx]
+        valid = valid_row[idx]
         ctx = TickCtx(stage=idx, micro=micro, valid=valid, t=t, fresh=fresh,
                       n_stages=n, n_micro=m)
 
@@ -229,8 +260,8 @@ def run_pipeline(stage_apply: StageApplyFn,
                 comms_next[s.name] = _shift_chain(slot, n, axis)
 
         # --- output collection at the last stage --------------------------
-        slot_i = jnp.clip(t - (n - 1), 0, m - 1)
-        take = jnp.logical_and(idx == n - 1, t >= n - 1)
+        slot_i = micro
+        take = jnp.logical_and(idx == n - 1, valid)
 
         def upd(buf, y):
             cur = jax.lax.dynamic_index_in_dim(buf, slot_i, 0, keepdims=False)
@@ -253,25 +284,348 @@ def run_pipeline(stage_apply: StageApplyFn,
         state, comms, outputs, stream = carry0, comms0, outputs0, stream0
         for t in range(T):
             out = tick_body(state, comms, outputs, resident,
-                            jnp.asarray(t), stream)
+                            jnp.asarray(t), fp_micro[t], fp_valid[t], stream)
             if streaming:
                 state, comms, outputs, resident, stream = out
             else:
                 state, comms, outputs, resident = out
     else:
-        def scan_body(loop, t):
+        def scan_body(loop, xs):
+            t, micro_row, valid_row = xs
             if streaming:
                 state, comms, outputs, resident, stream = loop
                 return tick_body(state, comms, outputs, resident, t,
-                                 stream), None
+                                 micro_row, valid_row, stream), None
             state, comms, outputs, resident = loop
-            return tick_body(state, comms, outputs, resident, t), None
+            return tick_body(state, comms, outputs, resident, t,
+                             micro_row, valid_row), None
         init = ((carry0, comms0, outputs0, resident, stream0) if streaming
                 else (carry0, comms0, outputs0, resident))
-        final, _ = jax.lax.scan(scan_body, init, jnp.arange(T))
+        final, _ = jax.lax.scan(scan_body, init,
+                                (jnp.arange(T), fp_micro, fp_valid))
         outputs, resident = final[2], final[3]
 
     return outputs, resident
+
+
+# ---------------------------------------------------------------------------
+# Fused schedule executor: forwards AND explicit-VJP backwards in one loop
+# ---------------------------------------------------------------------------
+
+def _oldjax_batch_axes(mesh, axis):
+    """Old-jax fully-manual fallback: the non-pipe mesh axes become explicit
+    batch parallelism.  Returns (axes, their size product)."""
+    baxes = tuple(a for a in mesh.axis_names if a != axis)
+    nd = 1
+    for a in baxes:
+        nd *= mesh.shape[a]
+    return baxes, nd
+
+
+def _oldjax_divisibility_error(nd):
+    return ValueError("jax 0.4.x fallback pipeline needs the micro-batch "
+                      f"divisible by pod*data*tp = {nd}")
+
+
+def _dyn_read(buf_tree, slot):
+    s = jnp.maximum(slot, 0)
+    return jax.tree.map(
+        lambda b: jax.lax.dynamic_index_in_dim(b, s, 0, keepdims=False),
+        buf_tree)
+
+
+def _masked_write(buf_tree, val_tree, slot, pred):
+    s = jnp.maximum(slot, 0)
+
+    def upd(b, v):
+        cur = jax.lax.dynamic_index_in_dim(b, s, 0, keepdims=False)
+        new = jnp.where(pred, v.astype(b.dtype), cur)
+        return jax.lax.dynamic_update_index_in_dim(b, new, s, 0)
+    return jax.tree.map(upd, buf_tree, val_tree)
+
+
+def run_pipeline_tasks(stage_apply: StageApplyFn,
+                       stage_params,
+                       head_params,
+                       inputs_mb,
+                       loss_args_mb,
+                       cfg: ParallelConfig,
+                       *,
+                       tplan: plan_lib.TaskPlan,
+                       loss_fn,
+                       carry_proto=None,
+                       axis: str = PIPE_AXIS,
+                       rank=None,
+                       loss_scale: float = 1.0):
+    """Execute a full F+B task table (GPipe or 1F1B) for one mini-batch.
+
+    Unlike :func:`run_pipeline` (whose backward order is whatever autodiff
+    induces — the GPipe reverse clock-cycle), this executor runs *backward
+    tasks inside the primal loop*: a B tick pops the stashed boundary
+    activation, recomputes the stage forward inside ``jax.vjp`` (the paper's
+    Checkpoint/Recompute pairing, now structural), and ships the input
+    cotangent down the reverse ring.  That is what lets 1F1B drain
+    backwards early and bound the activation stash at ``min(n - j, m)``
+    instead of ``m`` — the buffer is sized by the plan
+    (``tplan.stash_depth``), so the memory win is structural.
+
+    The last stage seeds each backward from ``loss_fn(head_params,
+    carry_out, loss_args[micro])``; losses accumulate in ascending micro
+    order on the last rank (identical in every schedule), and parameter
+    cotangents are collected per-micro and reduced in a fixed order
+    (``cfg.grad_reduce == "ordered"``), so any two schedules of the same
+    computation produce bitwise-identical losses and gradients.
+    ``grad_reduce == "running"`` instead folds cotangents in schedule order
+    — O(1) extra memory, but bit-exact only against itself.
+
+    Returns ``(loss_sum, stage_grads, head_grads, input_grads_mb)``:
+    ``loss_sum`` is the un-normalized sum of per-micro losses on the last
+    rank; grads already include the ``loss_scale / n_micro`` seed.
+    """
+    n, m = cfg.pipe, cfg.n_micro
+    assert tplan.n_stages == n and tplan.n_micro == m
+    T = tplan.n_ticks
+    if rank is not None:
+        idx = rank
+    else:
+        idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
+    if cfg.grad_reduce not in ("ordered", "running"):
+        raise ValueError(f"unknown grad_reduce {cfg.grad_reduce!r}; "
+                         "want 'ordered' or 'running'")
+    ordered = cfg.grad_reduce == "ordered"
+    seed = jnp.asarray(loss_scale / m, jnp.float32)
+
+    def zeros_of(proto):
+        return jax.tree.map(
+            lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
+
+    if carry_proto is None:
+        carry0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype),
+                              inputs_mb)
+    else:
+        carry0 = zeros_of(carry_proto)
+
+    def buf(depth, proto):
+        return jax.tree.map(
+            lambda c: jnp.zeros((depth,) + c.shape, c.dtype), proto)
+
+    fresh0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype),
+                          inputs_mb)
+    stash0 = buf(tplan.stash_depth, carry0)
+    f_inbox0 = buf(tplan.f_inbox_depth, carry0)
+    b_inbox0 = buf(tplan.b_inbox_depth, carry0)
+    igbuf0 = buf(m, fresh0)
+    if ordered:
+        g_stage0 = buf(m, stage_params)
+        g_head0 = buf(m, head_params)
+    else:
+        g_stage0 = jax.tree.map(jnp.zeros_like, stage_params)
+        g_head0 = jax.tree.map(jnp.zeros_like, head_params)
+
+    zeros_carry = lambda: jax.tree.map(jnp.zeros_like, carry0)
+    zeros_fresh = lambda: jax.tree.map(jnp.zeros_like, fresh0)
+    zeros_p = lambda: jax.tree.map(jnp.zeros_like, stage_params)
+    zeros_h = lambda: jax.tree.map(jnp.zeros_like, head_params)
+    is_last = idx == n - 1
+
+    def fwd_local(p_stage, carry_in, fresh, p_head, largs, micro, t):
+        ctx = TickCtx(stage=idx, micro=micro, valid=jnp.asarray(True), t=t,
+                      fresh=fresh, n_stages=n, n_micro=m)
+        carry_out, _, _ = stage_apply(p_stage, carry_in, {}, {}, ctx)
+        if not cfg.overlap:
+            (carry_out,), = (_barrier(carry_out),)
+        loss_i = jax.lax.cond(
+            is_last,
+            lambda: loss_fn(p_head, carry_out, largs).astype(jnp.float32),
+            lambda: jnp.zeros((), jnp.float32))
+        return carry_out, loss_i
+
+    def nop_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
+        return (zeros_carry(), zeros_carry(), zeros_p(), zeros_h(),
+                zeros_fresh(), jnp.zeros((), jnp.float32))
+
+    def f_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
+        carry_out, loss_i = fwd_local(stage_params, x_f, fresh, head_params,
+                                      largs, micro, t)
+        return (carry_out, zeros_carry(), zeros_p(), zeros_h(),
+                zeros_fresh(), loss_i)
+
+    def b_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
+        def f(p, c, fr, ph):
+            return fwd_local(p, c, fr, ph, largs, micro, t)
+        # jax.vjp recomputes the stage forward from the stashed boundary
+        # input and applies the cotangent immediately — remat-before-
+        # backward with no residuals carried across ticks.
+        _, vjp = jax.vjp(f, stage_params, stash_v, fresh, head_params)
+        loss_bar = jnp.where(is_last, seed, 0.0).astype(jnp.float32)
+        g_p, g_c, g_fr, g_ph = vjp((bseed, loss_bar))
+        return (zeros_carry(), g_c, g_p, g_ph, g_fr,
+                jnp.zeros((), jnp.float32))
+
+    def tick_body(state, xs):
+        (f_chain, b_chain, stash, f_inbox, b_inbox, loss_acc,
+         g_stage, g_head, igbuf) = state
+        t, kind_r, micro_r, ss_r, frs_r, frd_r, brs_r, brd_r = xs
+        kind = kind_r[idx]
+        micro = micro_r[idx]
+        ss, frs, frd = ss_r[idx], frs_r[idx], frd_r[idx]
+        brs, brd = brs_r[idx], brd_r[idx]
+
+        # 1. park ring arrivals in the inboxes
+        f_inbox = _masked_write(f_inbox, f_chain, frs, frs >= 0)
+        b_inbox = _masked_write(b_inbox, b_chain, brs, brs >= 0)
+
+        # 2. gather this tick's operands
+        x_f = _select(frd >= 0, _dyn_read(f_inbox, frd), zeros_carry())
+        stash_v = _dyn_read(stash, ss)
+        bseed = _select(brd >= 0, _dyn_read(b_inbox, brd), zeros_carry())
+        fresh = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, micro, 0,
+                                                   keepdims=False), inputs_mb)
+        largs = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, micro, 0,
+                                                   keepdims=False),
+            loss_args_mb)
+
+        # 3. run exactly one task (XLA conditional: no masked double work)
+        send_f, send_b, g_p, g_ph, g_fr, loss_i = jax.lax.switch(
+            kind, (nop_branch, f_branch, b_branch),
+            x_f, stash_v, fresh, largs, bseed, micro, t)
+
+        # 4. commit state
+        loss_acc = loss_acc + loss_i
+        is_b = kind == plan_lib.BWD
+        stash = _masked_write(stash, x_f, ss, (kind == plan_lib.FWD)
+                              & (ss >= 0))
+        if ordered:
+            g_stage = _masked_write(g_stage, g_p, micro, is_b)
+            g_head = _masked_write(g_head, g_ph, micro, is_b & is_last)
+        else:
+            g_stage = jax.tree.map(jnp.add, g_stage, g_p)
+            g_head = jax.tree.map(jnp.add, g_head, g_ph)
+        igbuf = _masked_write(igbuf, g_fr, micro, is_b & (idx == 0))
+        f_chain = _shift_chain(send_f, n, axis)
+        b_chain = _shift_chain_rev(send_b, n, axis)
+        return (f_chain, b_chain, stash, f_inbox, b_inbox, loss_acc,
+                g_stage, g_head, igbuf), None
+
+    init = (zeros_carry(), zeros_carry(), stash0, f_inbox0, b_inbox0,
+            jnp.zeros((), jnp.float32), g_stage0, g_head0, igbuf0)
+    xs = (jnp.arange(T), jnp.asarray(tplan.kind), jnp.asarray(tplan.micro),
+          jnp.asarray(tplan.stash_slot), jnp.asarray(tplan.f_recv_slot),
+          jnp.asarray(tplan.f_read_slot), jnp.asarray(tplan.b_recv_slot),
+          jnp.asarray(tplan.b_read_slot))
+    if cfg.unroll_ticks:
+        state = init
+        for t in range(T):
+            state, _ = tick_body(state, tuple(x[t] for x in xs))
+    else:
+        state, _ = jax.lax.scan(tick_body, init, xs)
+    loss_acc, g_stage, g_head, igbuf = state[5], state[6], state[7], state[8]
+    if ordered:
+        # fixed-order reduction over the micro axis: the sum is identical
+        # for every schedule, making gradients schedule-bitwise-stable.
+        g_stage = jax.tree.map(lambda a: jnp.sum(a, axis=0), g_stage)
+        g_head = jax.tree.map(lambda a: jnp.sum(a, axis=0), g_head)
+    return loss_acc, g_stage, g_head, igbuf
+
+
+def pipeline_grad_call(stage_apply: StageApplyFn,
+                       *,
+                       mesh: Mesh,
+                       cfg: ParallelConfig,
+                       loss_fn,
+                       carry_proto=None,
+                       axis: str = PIPE_AXIS):
+    """Build the fused schedule-driven training call.
+
+    Returns ``call(stage_params, head_params, inputs_mb, loss_args_mb) ->
+    (loss, stage_grads, head_grads, input_grads_mb)`` where:
+
+    * ``loss`` is the mean per-micro loss (matches ``head_loss`` over the
+      full batch up to micro-chunked summation order),
+    * ``stage_grads`` mirrors ``stage_params`` ([n_stages, ...], sharded
+      over ``pipe``),
+    * ``head_grads`` mirrors ``head_params`` (valid on the last rank),
+    * ``input_grads_mb`` mirrors ``inputs_mb`` ([m, ...], valid on rank 0)
+      — feed it to the embed VJP outside the pipeline.
+
+    The schedule comes from ``cfg.schedule``: ``"1f1b"`` or
+    ``"gpipe"``/``"gpipe_tasked"`` — both lowered by
+    :func:`repro.core.plan.plan_for` from the validated task tables in
+    :mod:`repro.core.schedules`.  Skip edges and resident state are not
+    supported in the fused executor (use the autodiff path).
+    """
+    n, m = cfg.pipe, cfg.n_micro
+    tplan = plan_lib.plan_for(cfg.schedule, m, n)
+
+    def inner(rank_arr, params, head_params, inputs_mb, loss_args_mb,
+              bdiv=1, psum_axes=()):
+        with compat.manual_region():
+            params = jax.tree.map(lambda a: a[0], params)
+
+            def localize(proto):
+                if proto is None or bdiv == 1:
+                    return proto
+                return jax.tree.map(
+                    lambda p: jax.ShapeDtypeStruct(
+                        (p.shape[0] // bdiv,) + tuple(p.shape[1:]), p.dtype),
+                    proto)
+
+            loss_sum, g_stage, g_head, ig = run_pipeline_tasks(
+                stage_apply, params, head_params, inputs_mb, loss_args_mb,
+                cfg, tplan=tplan, loss_fn=loss_fn,
+                carry_proto=localize(carry_proto), axis=axis,
+                rank=rank_arr[0], loss_scale=1.0 / bdiv)
+            if psum_axes:
+                # batch axes are manual here (old-jax fallback): the DP
+                # gradient reduction is explicit.
+                loss_sum, g_stage, g_head = jax.lax.psum(
+                    (loss_sum, g_stage, g_head), psum_axes)
+            loss = loss_sum * (1.0 / (bdiv * m))
+            loss = loss[None]
+            g_stage = jax.tree.map(lambda a: a[None], g_stage)
+            g_head = jax.tree.map(lambda a: a[None], g_head)
+            ig = jax.tree.map(lambda a: a[None], ig)
+            return loss, g_stage, g_head, ig
+
+    def call(stage_params, head_params, inputs_mb, loss_args_mb):
+        rank_arr = jnp.arange(n, dtype=jnp.int32)
+        if cfg.pipe > 1:
+            axis_names = {axis}
+            in_spec_x = in_spec_l = P()
+            out_spec_ig = P(axis)
+            bdiv, psum_axes = 1, ()
+            if not compat.JAX_HAS_NEW_API:
+                # Same old-jax fallback as pipeline_call: fully manual,
+                # non-pipe axes become explicit batch parallelism.
+                axis_names = set(mesh.axis_names)
+                baxes, nd = _oldjax_batch_axes(mesh, axis)
+                if nd > 1:
+                    leaves = (jax.tree.leaves(inputs_mb)
+                              + jax.tree.leaves(loss_args_mb))
+                    if not all(l.ndim > 1 and l.shape[1] % nd == 0
+                               for l in leaves):
+                        raise _oldjax_divisibility_error(nd)
+                    bdiv, psum_axes = nd, baxes
+                    in_spec_x = in_spec_l = P(None, baxes)
+                    out_spec_ig = P(axis, None, baxes)
+            fn = shard_map(
+                functools.partial(inner, bdiv=bdiv, psum_axes=psum_axes),
+                mesh=mesh,
+                in_specs=(P(axis), P(axis), P(), in_spec_x, in_spec_l),
+                out_specs=(P(axis), P(axis), P(axis), out_spec_ig),
+                axis_names=axis_names, check_vma=False)
+        else:
+            fn = inner
+        loss, g_stage, g_head, ig = fn(rank_arr, stage_params, head_params,
+                                       inputs_mb, loss_args_mb)
+        loss = loss[-1]
+        g_head = jax.tree.map(lambda a: a[-1], g_head)
+        ig = jax.tree.map(lambda a: a[0], ig)
+        return loss, g_stage, g_head, ig
+
+    return call, tplan
 
 
 # ---------------------------------------------------------------------------
@@ -303,20 +657,35 @@ def pipeline_call(stage_apply: StageApplyFn,
     #    SHARDED over pipe (micro-batch i at rank i%n, slot i//n) and
     #    rotated one hop per tick; the transpose is a reverse rotation (no
     #    psum), memory drops by n, and bf16 is safe.
-    def inner(params, inputs_mb, resident, in_dtypes, cfg_run):
-        params = jax.tree.map(lambda a: a[0], params)
-        resident = jax.tree.map(lambda a: a[0], resident)
-        if cfg_run.stream_inputs:
-            inputs_mb = jax.tree.map(lambda a: a[0], inputs_mb)
-        inputs_mb = jax.tree.map(lambda a, d: a.astype(d), inputs_mb,
-                                 in_dtypes)
-        outs, res = run_pipeline(stage_apply, params, inputs_mb, cfg_run,
-                                 skips=skips, skip_protos=skip_protos,
-                                 resident=resident, carry_proto=carry_proto,
-                                 axis=axis)
-        outs = jax.tree.map(lambda a: a[None], outs)
-        res = jax.tree.map(lambda a: a[None], res)
-        return outs, res
+    def inner(rank_arr, params, inputs_mb, resident, in_dtypes, cfg_run,
+              bdiv=1):
+        def localize(proto):
+            # protos describe GLOBAL batch shapes; inside a fully-manual
+            # region (old-jax fallback) each rank holds 1/bdiv of the batch.
+            if proto is None or bdiv == 1:
+                return proto
+            return jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    (p.shape[0] // bdiv,) + tuple(p.shape[1:]), p.dtype),
+                proto)
+
+        with compat.manual_region():
+            params = jax.tree.map(lambda a: a[0], params)
+            resident = jax.tree.map(lambda a: a[0], resident)
+            if cfg_run.stream_inputs:
+                inputs_mb = jax.tree.map(lambda a: a[0], inputs_mb)
+            inputs_mb = jax.tree.map(lambda a, d: a.astype(d), inputs_mb,
+                                     in_dtypes)
+            sk_protos = {k: localize(v)
+                         for k, v in (skip_protos or {}).items()}
+            outs, res = run_pipeline(stage_apply, params, inputs_mb, cfg_run,
+                                     skips=skips, skip_protos=sk_protos,
+                                     resident=resident,
+                                     carry_proto=localize(carry_proto),
+                                     axis=axis, rank=rank_arr[0])
+            outs = jax.tree.map(lambda a: a[None], outs)
+            res = jax.tree.map(lambda a: a[None], res)
+            return outs, res
 
     def call(stage_params, inputs_mb, resident=None):
         resident = {} if resident is None else resident
@@ -336,19 +705,59 @@ def pipeline_call(stage_apply: StageApplyFn,
             up = jax.tree.map(
                 lambda a: a.astype(jnp.float32)
                 if a.dtype == jnp.bfloat16 else a, inputs_mb)
+        rank_arr = jnp.arange(n, dtype=jnp.int32)
         if cfg.pipe > 1:
+            axis_names = {axis}
+            in_spec_res = out_spec_res = P(axis)
+            out_spec_outs = P(axis)
+            bdiv = 1
+            if not compat.JAX_HAS_NEW_API:
+                # jax 0.4.x: the partial-auto partitioner aborts on this
+                # program shape (XLA IsManualSubgroup check), so go FULLY
+                # manual and express what GSPMD would have derived by hand:
+                # every non-pipe axis becomes batch parallelism.  The
+                # tensor-parallel constraints inside the stage are already
+                # elided (compat.skip_constraints), so treating ``tp`` as
+                # extra DP is exact — each rank computes a distinct batch
+                # slice and the shard_map transpose psums parameter
+                # cotangents over the non-pipe axes (the DP grad reduction).
+                axis_names = set(mesh.axis_names)
+                baxes, nd = _oldjax_batch_axes(mesh, axis)
+                bdim_in = 2 if streaming else 1
+                if nd > 1:
+                    def divisible(leaf, d):
+                        return leaf.ndim > d and leaf.shape[d] % nd == 0
+                    if not (all(divisible(l, bdim_in)
+                                for l in jax.tree.leaves(up))
+                            and all(l.ndim < 4 or divisible(l, 3)
+                                    for l in jax.tree.leaves(resident))):
+                        raise _oldjax_divisibility_error(nd)
+                    bdiv = nd
+                    if streaming:
+                        in_spec_x = P(axis, None, baxes)
+                    else:
+                        in_spec_x = P(None, baxes)
+                    # resident caches: [n, L, m, mb, ...] -> batch at dim 3;
+                    # low-rank leaves (per-micro trackers) are replicated.
+                    def res_spec(leaf):
+                        if leaf.ndim >= 4:
+                            return P(axis, None, None, baxes)
+                        return P(axis)
+                    in_spec_res = jax.tree.map(res_spec, resident)
+                    out_spec_res = in_spec_res
+                    out_spec_outs = P(axis, None, baxes)
             fn = shard_map(
                 functools.partial(inner, in_dtypes=in_dtypes,
-                                  cfg_run=cfg_run), mesh=mesh,
-                in_specs=(P(axis), in_spec_x, P(axis)),
-                out_specs=(P(axis), P(axis)),
-                axis_names={axis}, check_vma=False)
+                                  cfg_run=cfg_run, bdiv=bdiv), mesh=mesh,
+                in_specs=(P(axis), P(axis), in_spec_x, in_spec_res),
+                out_specs=(out_spec_outs, out_spec_res),
+                axis_names=axis_names, check_vma=False)
         else:
             # Degenerate single-stage pipeline: plain sequential execution,
             # no manual axis (avoids size-1 manual subgroups).
             fn = functools.partial(inner, in_dtypes=in_dtypes,
                                    cfg_run=cfg_run.with_(stream_inputs=False))
-        return fn(stage_params, up, resident)
+        return fn(rank_arr, stage_params, up, resident)
 
     return call
 

@@ -1,0 +1,210 @@
+"""Lowering: schedule task tables -> per-rank, per-tick static plans.
+
+:mod:`repro.core.schedules` is the single source of truth for execution
+order: it builds task tables (lists of ticks, each tick a list of
+``Task("F"|"B", micro, stage)``) and proves them against the paper's
+dependency graph (``schedules.validate``).  This module lowers a validated
+table to the *static* per-rank arrays the compiled tick loop consumes:
+
+* :func:`lower_forward` — the forward-only plan for :func:`run_pipeline`
+  (autodiff-backward execution).  ``micro[t, j]`` / ``valid[t, j]`` replace
+  the hard-coded ``F_{t-j, j}`` arithmetic of paper Algorithm 1.
+
+* :func:`lower_tasks` — the full F+B plan for the fused scheduler
+  (``run_pipeline_tasks``), which executes forwards *and* explicit-VJP
+  backwards in one loop.  Besides task kind/micro it allocates three static
+  buffer disciplines, all sized at lowering time:
+
+  - an **activation stash** per stage (the paper's "stashed activations"):
+    F writes its boundary input, the matching B reads and frees it.  Slots
+    are assigned by a free-list walk, so the high-water mark per stage is
+    *exactly* ``schedules.peak_stash`` — ``m`` for GPipe, ``min(n - j, m)``
+    for 1F1B.  The SPMD buffer depth is the max over stages.
+  - a forward **inbox** per rank: the ring shift delivers rank ``j-1``'s
+    F output one tick after it is produced, possibly several ticks before
+    rank ``j`` consumes it (1F1B interleaves); arrivals park in inbox slots.
+  - a backward inbox, symmetric, for cotangents travelling ``j+1 -> j``.
+
+Every array is ``[n_ticks, n]`` host-side numpy, turned into constants of
+the compiled program; nothing about the order is decided at runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import schedules
+from repro.core.schedules import Task
+
+
+@dataclass(frozen=True)
+class ForwardPlan:
+    """Forward-only schedule: which F task each rank runs at each tick."""
+    micro: np.ndarray       # [T, n] int32 (clamped to [0, m) on bubble ticks)
+    valid: np.ndarray       # [T, n] bool
+    n_ticks: int
+    n_stages: int
+    n_micro: int
+
+
+def lower_forward(m: int, n: int) -> ForwardPlan:
+    """Lower the deterministic clock-cycle (Algorithm 1) to plan arrays.
+
+    Bubble entries keep the clamped ``t - j`` index the legacy inline
+    arithmetic used, so masked compute is bit-identical to the old loop.
+    """
+    table = list(schedules.clock_cycles(m, n))
+    T = len(table)
+    micro = np.zeros((T, n), np.int32)
+    valid = np.zeros((T, n), bool)
+    for t in range(T):
+        for j in range(n):
+            micro[t, j] = min(max(t - j, 0), m - 1)
+        for task in table[t]:
+            assert task.kind == "F"
+            micro[t, task.stage] = task.micro
+            valid[t, task.stage] = True
+    return ForwardPlan(micro, valid, T, n, m)
+
+
+NOP, FWD, BWD = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class TaskPlan:
+    """Full fused-schedule plan (forwards + explicit-VJP backwards)."""
+    kind: np.ndarray          # [T, n] 0=NOP 1=F 2=B
+    micro: np.ndarray         # [T, n] micro index of the task (0 on NOP)
+    stash_slot: np.ndarray    # [T, n] F: slot written; B: slot read; -1 else
+    f_recv_slot: np.ndarray   # [T, n] fwd-chain arrival -> inbox slot; -1
+    f_read_slot: np.ndarray   # [T, n] F input inbox slot; -1 (stage 0/no F)
+    b_recv_slot: np.ndarray   # [T, n] bwd-chain arrival -> inbox slot; -1
+    b_read_slot: np.ndarray   # [T, n] B seed inbox slot; -1 (last stage/no B)
+    n_ticks: int
+    n_stages: int
+    n_micro: int
+    stash_depth: int          # SPMD stash buffer depth (max over stages)
+    f_inbox_depth: int
+    b_inbox_depth: int
+    per_stage_stash: Tuple[int, ...]   # high-water per stage == peak_stash
+
+
+class _SlotPool:
+    """Free-list slot allocator; tracks the high-water mark."""
+
+    def __init__(self):
+        self.free: List[int] = []
+        self.next = 0
+        self.high = 0
+
+    def alloc(self) -> int:
+        if self.free:
+            return self.free.pop()
+        s = self.next
+        self.next += 1
+        self.high = max(self.high, self.next)
+        return s
+
+    def release(self, slot: int) -> None:
+        self.free.append(slot)
+
+
+def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int) -> TaskPlan:
+    """Lower a validated F/B task table to the fused executor's plan."""
+    schedules.validate(table, m, n, checkpoint=False,
+                       backward_micro_order=False)
+    T = len(table)
+    t_of: Dict[Task, int] = {}
+    for t, tick in enumerate(table):
+        per_stage = set()
+        for task in tick:
+            if task.kind == "R":
+                continue           # recompute is fused into B by the VJP
+            assert task.stage not in per_stage, \
+                f"tick {t}: stage {task.stage} runs two tasks"
+            per_stage.add(task.stage)
+            t_of[task] = t
+
+    kind = np.full((T, n), NOP, np.int32)
+    micro = np.zeros((T, n), np.int32)
+    stash_slot = np.full((T, n), -1, np.int32)
+    f_recv = np.full((T, n), -1, np.int32)
+    f_read = np.full((T, n), -1, np.int32)
+    b_recv = np.full((T, n), -1, np.int32)
+    b_read = np.full((T, n), -1, np.int32)
+
+    # --- task kinds + activation stash (per-stage free lists) --------------
+    stash_pools = [_SlotPool() for _ in range(n)]
+    live: List[Dict[int, int]] = [{} for _ in range(n)]   # stage -> micro->slot
+    for t, tick in enumerate(table):
+        for task in sorted(tick):
+            if task.kind == "R":
+                continue
+            j = task.stage
+            kind[t, j] = FWD if task.kind == "F" else BWD
+            micro[t, j] = task.micro
+            if task.kind == "F":
+                s = stash_pools[j].alloc()
+                live[j][task.micro] = s
+                stash_slot[t, j] = s
+            else:
+                s = live[j].pop(task.micro)
+                stash_slot[t, j] = s
+                stash_pools[j].release(s)
+    assert all(not lv for lv in live), "unbalanced stash (missing backwards)"
+
+    # --- inboxes: hold ring-shift arrivals until the consuming tick --------
+    def route(edges, recv, read):
+        """edges: per-rank list of (arrival_tick, consume_tick)."""
+        depth = 0
+        for j, rank_edges in enumerate(edges):
+            pool = _SlotPool()
+            for a, c in sorted(rank_edges):
+                assert a <= c, f"rank {j}: arrival {a} after consume {c}"
+            # replay in time order: arrivals allocate, consumes free
+            events = sorted([(a, 0, c) for a, c in rank_edges])
+            slot_of = {}
+            for a, _, c in events:
+                # free every slot whose consume tick has passed
+                for (aa, cc), s in list(slot_of.items()):
+                    if cc < a:
+                        pool.release(s)
+                        del slot_of[(aa, cc)]
+                s = pool.alloc()
+                slot_of[(a, c)] = s
+                recv[a, j] = s
+                read[c, j] = s
+            depth = max(depth, pool.high)
+        return depth
+
+    f_edges: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+    b_edges: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+    for i in range(m):
+        for j in range(1, n):
+            f_edges[j].append((t_of[Task("F", i, j - 1)] + 1,
+                               t_of[Task("F", i, j)]))
+        for j in range(n - 1):
+            b_edges[j].append((t_of[Task("B", i, j + 1)] + 1,
+                               t_of[Task("B", i, j)]))
+    f_depth = route(f_edges, f_recv, f_read)
+    b_depth = route(b_edges, b_recv, b_read)
+
+    per_stage = tuple(p.high for p in stash_pools)
+    assert list(per_stage) == schedules.peak_stash(table, n, m), \
+        "stash allocator disagrees with schedules.peak_stash"
+    return TaskPlan(kind, micro, stash_slot, f_recv, f_read, b_recv, b_read,
+                    T, n, m, max(per_stage), max(f_depth, 1),
+                    max(b_depth, 1), per_stage)
+
+
+def plan_for(schedule: str, m: int, n: int) -> TaskPlan:
+    """Build + lower the named schedule ("gpipe" or "1f1b")."""
+    if schedule in ("gpipe", "gpipe_tasked"):
+        table = schedules.gpipe_schedule(m, n, checkpoint=False)
+    elif schedule == "1f1b":
+        table = schedules.one_f_one_b_schedule(m, n)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return lower_tasks(table, m, n)

@@ -14,6 +14,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
+_CompilerParams = pallas_compiler_params()
+
 
 def _kernel(x_ref, s_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -40,7 +44,7 @@ def rmsnorm_pallas(x, scale, eps: float = 1e-6, *, block_rows: int = 256,
                   pl.BlockSpec((d,), lambda i: (0,))],
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xf, scale)

@@ -24,6 +24,8 @@ import traceback
 import jax
 import numpy as np
 
+from repro import compat
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import SHAPES_BY_NAME
 from repro.launch import mesh as mesh_lib
@@ -52,14 +54,14 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     model = LMModel(arch, pcfg)
     t0 = time.time()
     cell = steps.build_cell(model, pcfg, mesh, shape)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
         lowered = jitted.lower(*cell.abstract_args)
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled) or {}
     hlo = compiled.as_text()
     cost = analysis.analyze_hlo(hlo, n_dev)
     mf = analysis.model_flops_for(arch, shape) / n_dev

@@ -18,8 +18,11 @@ from typing import Optional
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
+# AxisType only exists on jax >= 0.5; repro.compat supplies a no-op enum (and
+# axis_types-tolerant constructors) on 0.4.x so collection never breaks.
+from repro.compat import AxisType, make_mesh, mesh_with_axis_types
 from repro.configs.base import ParallelConfig
 
 
@@ -27,9 +30,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes),
+                     devices=jax.devices()[:n])
 
 
 def make_arch_mesh(pcfg: ParallelConfig, *, base: Optional[Mesh] = None) -> Mesh:
@@ -55,8 +58,8 @@ def make_arch_mesh(pcfg: ParallelConfig, *, base: Optional[Mesh] = None) -> Mesh
     # assignment's canonical (data, model) grid intact.
     grid = devs.reshape(pod, data, pcfg.dp2, pcfg.pipe, pcfg.tp) \
         .reshape(pod, data * pcfg.dp2, pcfg.pipe, pcfg.tp)
-    return Mesh(grid, ("pod", "data", "pipe", "tp"),
-                axis_types=(AxisType.Auto,) * 4)
+    return mesh_with_axis_types(grid, ("pod", "data", "pipe", "tp"),
+                                axis_types=(AxisType.Auto,) * 4)
 
 
 def make_smoke_mesh(pcfg: ParallelConfig) -> Mesh:
@@ -64,5 +67,5 @@ def make_smoke_mesh(pcfg: ParallelConfig) -> Mesh:
     n = pcfg.pod * pcfg.data * pcfg.pipe * pcfg.tp
     devs = np.array(jax.devices()[:n]).reshape(
         pcfg.pod, pcfg.data, pcfg.pipe, pcfg.tp)
-    return Mesh(devs, ("pod", "data", "pipe", "tp"),
-                axis_types=(AxisType.Auto,) * 4)
+    return mesh_with_axis_types(devs, ("pod", "data", "pipe", "tp"),
+                                axis_types=(AxisType.Auto,) * 4)

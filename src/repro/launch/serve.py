@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig
 from repro.launch import mesh as mesh_lib, steps
@@ -45,7 +46,7 @@ def main():
     model = LMModel(arch, pcfg, dtype=dtype)
     params = model.init(jax.random.PRNGKey(0))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         prefill = jax.jit(steps.build_prefill_step(model, pcfg, mesh, pshape))
         decode = jax.jit(steps.build_serve_step(model, pcfg, mesh, dshape))
         cache = model.init_cache(dshape, pcfg.n_micro, filled=False)

@@ -16,7 +16,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.core.pipeline import (last_stage_output, microbatch, pipeline_call,
-                                 unmicrobatch)
+                                 pipeline_grad_call, unmicrobatch)
 from repro.launch import sharding
 from repro.models.lm import LMModel
 from repro.optim import optimizers as optim
@@ -34,8 +34,20 @@ def _carry_proto(model: LMModel, mbg: int, seq: int):
 def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
                      shape: ShapeConfig,
                      ocfg: Optional[optim.OptimizerConfig] = None):
-    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``pcfg.schedule`` selects the execution order: the default ``"gpipe"``
+    runs the forward clock-cycle and lets autodiff induce the reverse
+    clock-cycle; ``"1f1b"`` / ``"gpipe_tasked"`` run the fused scheduler,
+    where backward tasks execute inside the tick loop per the task table
+    (see repro.core.plan) and the activation stash is sized structurally.
+    """
     ocfg = ocfg or optim.OptimizerConfig()
+    if pcfg.schedule in ("1f1b", "gpipe_tasked"):
+        return _build_train_step_fused(model, pcfg, mesh, shape, ocfg)
+    if pcfg.schedule != "gpipe":
+        raise ValueError(f"unknown schedule {pcfg.schedule!r}; "
+                         "want 'gpipe', 'gpipe_tasked', or '1f1b'")
     consts = model.consts()
     stage_apply = model.make_stage_apply(consts)
     mbg = shape.global_batch // pcfg.n_micro
@@ -56,6 +68,53 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
 
     def train_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params2, opt2, metrics = optim.apply(ocfg, opt_state, params, grads)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
+                            shape: ShapeConfig, ocfg: optim.OptimizerConfig):
+    """Schedule-driven train step: the pipeline computes its own gradients.
+
+    The fused executor returns stage grads, head grads, and per-micro input
+    cotangents; only the (cheap, GSPMD-land) embedding VJP remains outside
+    the pipeline.  Tied-embedding models route part of the table's gradient
+    through the head loss — both contributions are summed here.
+    """
+    if model.skips():
+        raise NotImplementedError(
+            "fused schedules do not support cross-stage skip edges yet; "
+            "use schedule='gpipe' for encoder-decoder models")
+    if pcfg.stream_inputs:
+        # don't silently drop a memory knob the gpipe path honors
+        raise NotImplementedError(
+            "stream_inputs is not supported by the fused scheduler yet; "
+            "use schedule='gpipe' or stream_inputs=False")
+    consts = model.consts()
+    stage_apply = model.make_stage_apply(consts)
+    mbg = shape.global_batch // pcfg.n_micro
+
+    def micro_loss(head_ps, carry, largs):
+        return model.head_loss(head_ps, carry["h"], largs["labels"])
+
+    pipe_grad, _ = pipeline_grad_call(
+        stage_apply, mesh=mesh, cfg=pcfg, loss_fn=micro_loss,
+        carry_proto=_carry_proto(model, mbg, shape.seq_len))
+
+    def train_step(params, opt_state, batch):
+        fresh, embed_vjp = jax.vjp(
+            lambda emb: model.embed_inputs(emb, batch), params["embed"])
+        inputs_mb = microbatch(fresh, pcfg.n_micro)
+        labels_mb = microbatch({"labels": batch["labels"]}, pcfg.n_micro)
+        head_ps = {"head": params["head"], "embed": params["embed"]}
+        loss, g_stage, g_head, ig = pipe_grad(params["stages"], head_ps,
+                                              inputs_mb, labels_mb)
+        (g_embed,) = embed_vjp(unmicrobatch(ig))
+        g_embed = jax.tree.map(jnp.add, g_embed, g_head["embed"])
+        grads = {"embed": g_embed, "stages": g_stage, "head": g_head["head"]}
         params2, opt2, metrics = optim.apply(ocfg, opt_state, params, grads)
         metrics["loss"] = loss
         return params2, opt2, metrics

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ShapeConfig
@@ -66,7 +67,7 @@ def main():
           f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
           f"mesh={dict(mesh.shape)}")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn_jit = jax.jit(
             steps.build_train_step(model, pcfg, mesh, shape, ocfg))
 
@@ -82,7 +83,7 @@ def main():
     def step_fn(state, i):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
         t0 = time.perf_counter()
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p, o, m = step_fn_jit(state["params"], state["opt"], batch)
         loss = float(m["loss"])
         if i % log_every == 0:

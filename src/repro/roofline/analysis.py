@@ -190,15 +190,25 @@ def fused_bodies(comps: Dict[str, Computation]) -> Set[str]:
     return out
 
 
+def _operand_names(line: str, opcode: str) -> List[str]:
+    """Operand instruction names of ``opcode(...)``, tolerating both operand
+    syntaxes: bare ``%name`` (new dumps) and ``f32[..]{..} %name`` (0.4.x
+    prints each operand with its inline type)."""
+    m = re.search(rf"{opcode}\(([^)]*)\)", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
+
+
 def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
     res = shape_dims(ins.shape)
     if not res:
         return 0.0
     out_elems = sum(math.prod(d) for _, d in res)
-    m = re.search(r"dot\(\s*%?([\w\.\-]+)", ins.line)
+    ops = _operand_names(ins.line, "dot")
     k = 1
-    if m:
-        lhs_shape = symtab.get(m.group(1), "")
+    if ops:
+        lhs_shape = symtab.get(ops[0], "")
         mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
         dims = shape_dims(lhs_shape)
         if mc and dims:
@@ -213,10 +223,10 @@ def _conv_flops(ins: Instr, symtab: Dict[str, str]) -> float:
     if not res:
         return 0.0
     out_elems = sum(math.prod(d) for _, d in res)
-    m = re.search(r"convolution\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)", ins.line)
-    if not m:
+    ops = _operand_names(ins.line, "convolution")
+    if len(ops) < 2:
         return 0.0
-    rhs = shape_dims(symtab.get(m.group(2), ""))
+    rhs = shape_dims(symtab.get(ops[1], ""))
     kernel = math.prod(rhs[0][1]) if rhs else 1
     # flops ≈ 2 * out_elems * (kernel_elems / out_channels); approximate via
     # kernel spatial*in_ch: divide by last dim (out features) when plausible

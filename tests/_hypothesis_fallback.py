@@ -1,0 +1,114 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests use a small, stable slice of the hypothesis API
+(``given`` / ``settings`` / ``strategies.{integers,floats,booleans,lists,
+tuples,sampled_from}`` plus ``.map``).  CI installs the real package (see
+pyproject.toml); this fallback keeps the tier-1 suite runnable in hermetic
+containers that cannot pip-install, by replaying each strategy with a
+deterministic per-test PRNG.  No shrinking, no database — a failing example
+is reported verbatim by pytest.
+
+Activated by ``conftest.py`` only when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: random.Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 examples")
+        return SearchStrategy(draw)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+        options = list(options)
+        return SearchStrategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def lists(elem: SearchStrategy, *, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng: random.Random):
+            k = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(k)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*elems: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # Deterministic per-test stream: boundary-ish first example
+            # ordering is not replicated, but seeds are stable run-to-run.
+            rng = random.Random(f"fallback:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+
+        # pytest must not mistake the strategy-filled parameters for
+        # fixtures: hide the wrapped signature entirely.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def assume(condition: bool) -> bool:
+    # Real hypothesis aborts the example; without shrinking machinery we can
+    # only skip by returning early — callers in this repo don't use assume.
+    if not condition:
+        raise NotImplementedError("assume() unsupported in fallback")
+    return True

@@ -13,6 +13,16 @@ import pytest
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+try:
+    import hypothesis  # noqa: F401  (preferred when installed — see pyproject)
+except ImportError:
+    # Hermetic containers can't pip-install; register the deterministic
+    # fallback under the real name so test modules import it unchanged.
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
 
 def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
     """Run ``code`` in a fresh python with N host devices; assert rc == 0."""

@@ -6,6 +6,7 @@ from conftest import run_subprocess
 
 UNET = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.unet import UNetConfig, UNetModel
@@ -21,13 +22,13 @@ x = jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3))
 prog = PH.build_hetero_program(model, params, 4, pcfg, x[:4])
 if {portals}:
     assert prog.skips, "portal edges expected for cross-stage skips"
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_pipe = jax.jit(lambda xx: PH.hetero_forward(prog, mesh, pcfg, xx))(x)
 y_seq = model.apply_sequential(params, x)
 np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_seq),
                            rtol=2e-4, atol=2e-4)
 # gradients flow through the switch program + portals
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     def loss(p, xx):
         prog2 = PH.HeteroProgram(p, prog.stage_apply, prog.carry_proto,
                                  prog.skips, prog.skip_protos, prog.out_proto)
@@ -39,6 +40,7 @@ print("UNET HETERO OK portals={portals}")
 
 AMOEBA = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro.configs.base import ParallelConfig
 from repro.launch import mesh as mesh_lib
 from repro.models.amoebanet import AmoebaConfig, AmoebaNetModel
@@ -51,7 +53,7 @@ model = AmoebaNetModel(cfg, pcfg.pipe)
 params = model.init(jax.random.PRNGKey(2))
 x = jax.random.normal(jax.random.PRNGKey(3), (8, 32, 32, 3))
 prog = PH.build_hetero_program(model, params, 4, pcfg, x[:4])
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_pipe = jax.jit(lambda xx: PH.hetero_forward(prog, mesh, pcfg, xx))(x)
 y_seq = model.apply_sequential(params, x)
 np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_seq),

@@ -12,6 +12,7 @@ from conftest import run_subprocess
 EQUIV_TEMPLATE = """
 import zlib, dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig, ParallelConfig
 from repro.launch import mesh as mesh_lib
@@ -28,7 +29,7 @@ def run(pcfg):
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
     params = model.init(key)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         consts = model.consts()
         mbg = shape.global_batch // pcfg.n_micro
         pipe = pipeline_call(
@@ -92,6 +93,7 @@ def test_pipeline_equals_sequential(name, remat, portals, overlap):
 
 TRAIN_LOOP = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig, ParallelConfig
 from repro.launch import mesh as mesh_lib, steps, sharding
@@ -106,7 +108,7 @@ shape = ShapeConfig("t", seq_len=16, global_batch=8, kind="train")
 params = model.init(jax.random.PRNGKey(0))
 ocfg = optim.OptimizerConfig(lr=2e-3, warmup_steps=2, total_steps=20)
 opt = optim.init(ocfg, params)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape, ocfg))
     batch = {}
     key = jax.random.PRNGKey(1)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import ShapeConfig
 from repro.launch import mesh as mesh_lib, steps
@@ -35,7 +36,7 @@ def test_arch_smoke_train_and_serve(name):
     params = model.init(key)
     ocfg = optim.OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=8)
     opt = optim.init(ocfg, params)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape, ocfg))
         batch = make_batch(model, shape, key)
         losses = []

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro import configs
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ShapeConfig
@@ -25,7 +26,7 @@ def _build(name="smollm-360m"):
     ocfg = optim.OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=40)
     data = SyntheticLM(DataConfig(seed=11, vocab=arch.vocab, seq_len=16,
                                   global_batch=4))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape, ocfg))
     return model, ocfg, data, step, mesh
 
@@ -47,7 +48,7 @@ def test_train_ckpt_preempt_restart_is_exact(tmp_path):
 
         def step_fn(state, i):
             batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 p, o, m = step(state["params"], state["opt"], batch)
             return {"params": p, "opt": o}, {"loss": float(m["loss"])}
 
@@ -73,7 +74,7 @@ def test_loss_decreases_over_fixed_batch():
     params = model.init(jax.random.PRNGKey(0))
     opt = optim.init(ocfg, params)
     losses = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(8):
             batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
             params, opt, m = step(params, opt, batch)
@@ -91,6 +92,7 @@ def test_elastic_restack_preserves_function():
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.configs.base import ShapeConfig
+from repro.compat import set_mesh
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import mesh as mesh_lib
 from repro.models.lm import LMModel
@@ -108,7 +110,7 @@ batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
 def loss_with(pcfg, params):
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         consts = model.consts()
         mbg = shape.global_batch // pcfg.n_micro
         pipe = pipeline_call(
