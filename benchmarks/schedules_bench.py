@@ -1,8 +1,9 @@
 """Schedule A/B benchmark: GPipe vs 1F1B step time + peak activation bytes.
 
 Runs the fused scheduler (``schedule="gpipe_tasked"`` vs ``"1f1b"``) and the
-legacy autodiff path (``"gpipe"``) on real multi-device pipelines (XLA host
-devices, reduced model — CPU is the runtime, TPU the target) and emits a
+legacy-semantics autodiff path (``"gpipe"``, the forward-only plan through
+the same executor) on real multi-device pipelines (XLA host devices,
+reduced model — CPU is the runtime, TPU the target) and emits a
 machine-readable ``BENCH_schedules.json`` so the perf trajectory has a
 baseline:
 
@@ -11,10 +12,16 @@ baseline:
   numbers baseline *relative* schedule cost, not hardware throughput).
 * ``stash_depth`` / ``per_stage_stash`` — the plan-derived activation stash
   (number of live micro-batch boundary activations per stage).
-* ``peak_activation_bytes`` — stash_depth x bytes(one boundary activation),
-  the structural per-device stash footprint.  1F1B's bound is
+* ``per_stage_activation_bytes`` — the TRUE per-stage stash footprint
+  (``per_stage_stash[j] x bytes(one boundary activation)``), what a
+  per-device allocator charges stage ``j``; 1F1B's bound is
   ``min(n - j, m)`` vs GPipe's ``m`` (paper §2.1's motivation, realized
-  beyond-paper).
+  beyond-paper).  ``peak_activation_bytes`` is the flattened SPMD max over
+  stages (the uniform buffer the compiled program allocates today).
+
+Two model families cover the unified runtime's surface: the plain LM path
+and a U-Net-style portal model (cross-stage skip edges lowered to plan
+routes), so the bench trajectory breaks if either regresses.
 """
 import json
 import os
@@ -33,12 +40,37 @@ from repro.configs.base import ShapeConfig, ParallelConfig
 from repro.core import plan as plan_lib
 from repro.launch import mesh as mesh_lib, steps
 from repro.models.lm import LMModel
+from repro.models import pipeline_hetero as PH
+from repro.models.unet import UNetConfig, UNetModel
 from repro.optim import optimizers as optim
 
 arch = configs.smoke_arch("smollm-360m")
 shape = ShapeConfig("t", seq_len=32, global_batch={batch}, kind="train")
 key = jax.random.PRNGKey(0)
 rows = []
+
+def stash_report(schedule, pipe, m, carry_bytes):
+    if schedule == "gpipe":
+        depth, per_stage = m, [m] * pipe   # autodiff stashes every micro
+    else:
+        tplan = plan_lib.plan_for(schedule, m, pipe)
+        depth, per_stage = tplan.stash_depth, list(tplan.per_stage_stash)
+    return dict(stash_depth=depth, per_stage_stash=per_stage,
+                peak_activation_bytes=depth * carry_bytes,
+                per_stage_activation_bytes=[d * carry_bytes
+                                            for d in per_stage],
+                carry_bytes_per_micro=carry_bytes)
+
+def time_step(step, *args):
+    out = step(*args)                      # compile + warm
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = step(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / iters, out
+
 for pipe, m in {grid}:
     for schedule in ("gpipe", "gpipe_tasked", "1f1b"):
         pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
@@ -52,29 +84,42 @@ for pipe, m in {grid}:
                  for k, v in model.input_specs(shape).items()}}
         mbg = shape.global_batch // m
         carry_bytes = mbg * shape.seq_len * arch.d_model * 4   # f32 boundary
-        if schedule == "gpipe":
-            depth, per_stage = m, [m] * pipe   # autodiff stashes every micro
-        else:
-            tplan = plan_lib.plan_for(schedule, m, pipe)
-            depth, per_stage = tplan.stash_depth, list(tplan.per_stage_stash)
         with set_mesh(mesh):
             step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape,
                                                   ocfg))
-            p, o, mt = step(params, opt, batch)      # compile + warm
-            jax.block_until_ready(mt["loss"])
-            iters = 3
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                p, o, mt = step(p, o, batch)
-            jax.block_until_ready(mt["loss"])
-            dt = (time.perf_counter() - t0) / iters
+            dt, (p, o, mt) = time_step(step, params, opt, batch)
         rows.append(dict(
-            schedule=schedule, pipe=pipe, n_micro=m,
-            us_per_step=round(dt * 1e6, 1),
-            loss=float(mt["loss"]),
-            stash_depth=depth, per_stage_stash=per_stage,
-            peak_activation_bytes=depth * carry_bytes,
-            carry_bytes_per_micro=carry_bytes))
+            model="lm", schedule=schedule, pipe=pipe, n_micro=m,
+            us_per_step=round(dt * 1e6, 1), loss=float(mt["loss"]),
+            **stash_report(schedule, pipe, m, carry_bytes)))
+
+# --- portal-model variant: U-Net skips through the unified runtime -------
+ucfg = UNetConfig(B=1, C=8, levels=4, img=32)
+UB = 8
+x = jax.random.normal(jax.random.PRNGKey(1), (UB, ucfg.img, ucfg.img, 3))
+for pipe, m in [(4, 4)]:
+    losses = {{}}
+    for schedule in ("gpipe_tasked", "1f1b"):
+        pcfg = ParallelConfig(pipe=pipe, tp=1, data=2, pod=1, n_micro=m,
+                              portals=True, remat="full", schedule=schedule)
+        mesh = mesh_lib.make_smoke_mesh(pcfg)
+        umodel = UNetModel(ucfg, pcfg.pipe)
+        uparams = umodel.init(jax.random.PRNGKey(0))
+        prog = PH.build_hetero_program(umodel, uparams, UB // m, pcfg, x[:2])
+        carry_bytes = (UB // m) * prog.carry_proto["buf"].shape[1] * 4
+        with set_mesh(mesh):
+            tgt = jnp.zeros((UB,) + tuple(prog.out_proto.shape[1:]),
+                            jnp.float32)
+            call = jax.jit(PH.hetero_grad_call(prog, mesh, pcfg))
+            dt, (loss, _) = time_step(call, prog.stacked_params, x, tgt)
+        losses[schedule] = float(loss)
+        rows.append(dict(
+            model="unet-portal", schedule=schedule, pipe=pipe, n_micro=m,
+            n_skip_edges=len(prog.skips),
+            us_per_step=round(dt * 1e6, 1), loss=float(loss),
+            **stash_report(schedule, pipe, m, carry_bytes)))
+    # the unified runtime's contract: schedules are the same computation
+    assert losses["gpipe_tasked"] == losses["1f1b"], losses
 print("JSON" + json.dumps(rows))
 """
 
@@ -83,22 +128,25 @@ def main(grid=((2, 4), (4, 8)), batch=16, n_devices=8):
     out = run_with_devices(BENCH.format(grid=tuple(grid), batch=batch),
                            n_devices=n_devices, timeout=2400)
     rows = json.loads(out.split("JSON", 1)[1])
-    report = {"bench": "schedules", "arch": "smollm-360m(smoke)",
+    report = {"bench": "schedules", "arch": "smollm-360m(smoke)+unet(smoke)",
               "rows": rows}
     with open(OUT, "w") as f:
         json.dump(report, f, indent=2)
     for r in rows:
-        print(f"schedule_{r['schedule']}_p{r['pipe']}_m{r['n_micro']},"
-              f"{r['us_per_step']},stash={r['stash_depth']}"
+        print(f"schedule_{r['model']}_{r['schedule']}_p{r['pipe']}"
+              f"_m{r['n_micro']},{r['us_per_step']},stash={r['stash_depth']}"
               f",act_bytes={r['peak_activation_bytes']}")
-    # sanity: the 1F1B memory bound must hold in every emitted row
-    by_key = {(r["pipe"], r["n_micro"], r["schedule"]): r for r in rows}
-    for (pipe, m, s), r in by_key.items():
+    # sanity: the 1F1B memory bound must hold PER STAGE in every row
+    by_key = {(r["model"], r["pipe"], r["n_micro"], r["schedule"]): r
+              for r in rows}
+    for (model, pipe, m, s), r in by_key.items():
         if s == "1f1b":
-            g = by_key[(pipe, m, "gpipe_tasked")]
-            assert r["peak_activation_bytes"] <= g["peak_activation_bytes"]
-            assert all(r["per_stage_stash"][j] <= min(pipe - j, m)
-                       for j in range(pipe))
+            g = by_key[(model, pipe, m, "gpipe_tasked")]
+            assert r["per_stage_stash"] \
+                == [min(pipe - j, m) for j in range(pipe)]
+            assert all(a <= b for a, b in
+                       zip(r["per_stage_activation_bytes"],
+                           g["per_stage_activation_bytes"]))
     print(f"# wrote {OUT}")
     return report
 

@@ -8,21 +8,35 @@ FSDP/TP/DP sharding inside a stage is delegated to the compiler via
 ``with_sharding_constraint`` — the paper's "device j holds partition j"
 placement, generalized to a 512-chip mesh.
 
-The deterministic clock-cycle (paper Algorithm 1) is a loop over ticks
-``t = 0 .. m+n-2``; at tick ``t``, pipe-rank ``j`` executes task
-``F_{t-j, j}`` (ranks whose ``t - j`` falls outside ``[0, m)`` are in the
-fill/drain bubble and compute on zeros; their results are masked out of the
-collected outputs, so autodiff assigns them exactly zero cotangent and the
-bubble contributes nothing to gradients).  Boundary activations move with a
-single-step ``collective-permute`` ring shift; skip tensors move via portals
-(:mod:`repro.core.skip`).  ``jax.grad`` through the loop yields the reverse
-clock-cycle with rematerialization scheduled immediately before each stage
-backward — the paper's fork/join + Checkpoint/Recompute pairing, obtained
-structurally (DESIGN.md §2).
+There is ONE execution engine: :func:`run_pipeline_tasks`, a scan over the
+static event plan lowered by :mod:`repro.core.plan` from a validated
+schedule task table (:mod:`repro.core.schedules`).  Each tick, rank ``j``
+runs at most one task — NOP (bubble), F, or B — selected by
+``lax.switch``; boundary activations move with a single-step
+``collective-permute`` ring shift into plan-allocated inbox slots, skip
+tensors move on plan-lowered portal/threaded routes (paper §3.3), resident
+state (KV caches) is read and updated on F ticks, and streamed inputs
+rotate towards stage 0 on plan-flagged ticks.
+
+Two plan families select the backward story:
+
+* **forward-only plans** (``gpipe_fwd``, paper Algorithm 1): the executor
+  runs just the forward wavefront and ``jax.grad`` through it yields the
+  reverse clock-cycle with rematerialization scheduled immediately before
+  each stage backward — the paper's fork/join + Checkpoint/Recompute
+  pairing, obtained structurally (DESIGN.md §2).  :func:`run_pipeline` /
+  :func:`pipeline_call` are thin wrappers that lower this plan.
+
+* **F+B plans** (``gpipe_tasked`` / ``1f1b``): backward tasks execute
+  *inside* the same loop — a B tick pops the stashed boundary activation
+  (and parked skip operands), recomputes the stage forward inside
+  ``jax.vjp``, and ships input / skip cotangents down the reverse routes.
+  That is what lets 1F1B drain backwards early and bound the activation
+  stash at ``min(n - j, m)`` instead of ``m``; see
+  :func:`pipeline_grad_call`.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
@@ -36,7 +50,7 @@ from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ParallelConfig
 from repro.core import checkpointing
 from repro.core import plan as plan_lib
-from repro.core.skip import SkipSpec, portal_sends, ring_init, ring_push, ring_read
+from repro.core.skip import SkipSpec
 
 PIPE_AXIS = "pipe"
 
@@ -45,8 +59,8 @@ PIPE_AXIS = "pipe"
 class TickCtx:
     """Per-tick context handed to the stage function."""
     stage: jax.Array          # axis_index('pipe') — traced
-    micro: jax.Array          # clamped micro-batch index  t - stage
-    valid: jax.Array          # bool: is (micro, stage) a real task this tick?
+    micro: jax.Array          # micro-batch index of this rank's task
+    valid: jax.Array          # bool: is this a real (scheduled) task?
     t: Any                    # tick counter (traced in scan mode, int if unrolled)
     fresh: Any                # stage-0 input pytree slice for this tick
     n_stages: int
@@ -77,6 +91,12 @@ def _shift_chain_rev(value, n: int, axis: str):
         return jax.tree.map(jnp.zeros_like, value)
     perm = [(i, i - 1) for i in range(1, n)]
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
+
+
+def _route_hop(value, perm, axis: str):
+    """One skip-route hop: a static (src, dst) pair list ppermute."""
+    return jax.tree.map(
+        lambda v: jax.lax.ppermute(v, axis, list(perm)), value)
 
 
 BATCH_AXES = ("pod", "data")
@@ -124,194 +144,6 @@ def _barrier(*trees):
     return tuple(res)
 
 
-# ---------------------------------------------------------------------------
-# The clock-cycle loop (runs INSIDE shard_map, manual over 'pipe')
-# ---------------------------------------------------------------------------
-
-def run_pipeline(stage_apply: StageApplyFn,
-                 stage_params,
-                 inputs_mb,
-                 cfg: ParallelConfig,
-                 *,
-                 skips: Sequence[SkipSpec] = (),
-                 skip_protos: Optional[Dict[str, Any]] = None,
-                 resident=None,
-                 carry_proto=None,
-                 axis: str = PIPE_AXIS,
-                 rank=None):
-    """Execute the GPipe schedule for one mini-batch.
-
-    Args:
-      stage_apply: per-stage function, see StageApplyFn.
-      stage_params: this rank's stage parameters (already squeezed).
-      inputs_mb: pytree with leading micro-batch axis [m, ...] (replicated
-        over pipe; only rank 0 consumes it as ``ctx.fresh``).
-      cfg: ParallelConfig (n_micro, pipe, remat, portals, overlap, ...).
-      skips: skip edges (portal or threaded per cfg.portals).
-      skip_protos: {name: pytree of ShapeDtypeStruct} for ring/slot init.
-      resident: rank-local pytree (KV caches / SSM state), updated only on
-        valid ticks.
-      carry_proto: pytree of ShapeDtypeStruct describing the stage-boundary
-        carry. Defaults to the structure of one fresh input slice.
-
-    Returns: (outputs [m, ...carry], resident) — outputs valid on last rank.
-    """
-    n, m = cfg.pipe, cfg.n_micro
-    T = m + n - 1
-    # pipe == 1 runs outside shard_map (see pipeline_call): no axis to index.
-    # ``rank`` (a P(pipe)-sharded iota slice) replaces jax.lax.axis_index:
-    # the raw partition-id op it lowers to is rejected by 0.4.x's
-    # partial-auto partitioner, while a sharded input works everywhere.
-    if rank is not None:
-        idx = rank
-    else:
-        idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
-    skip_protos = skip_protos or {}
-    resident = {} if resident is None else resident
-
-    def zeros_of(proto):
-        return jax.tree.map(
-            lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
-
-    if carry_proto is None:
-        carry0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype), inputs_mb)
-    else:
-        carry0 = zeros_of(carry_proto)
-    outputs0 = jax.tree.map(lambda c: jnp.zeros((m,) + c.shape, c.dtype), carry0)
-
-    if cfg.portals:
-        comms0 = {s.name: ring_init(s, skip_protos[s.name]) for s in skips}
-    else:
-        comms0 = {s.name: zeros_of(skip_protos[s.name]) for s in skips}
-
-    inputs_mb = _constrain_batch0(inputs_mb, lead=1)
-    streaming = cfg.stream_inputs and n > 1
-    k = m // n if streaming else 0   # micro-batches per rank (validated in
-    #                                  pipeline_call: m % n == 0)
-
-    # The tick loop is generated from the validated clock-cycle task table
-    # (schedules.clock_cycles, paper Algorithm 1) rather than inline
-    # ``F_{t-j,j}`` arithmetic: micro/valid per (tick, rank) are plan
-    # constants.  Forward-only execution is schedule-invariant — a
-    # flush-synchronous 1F1B has the identical forward wavefront; the
-    # schedules only diverge once backwards interleave (run_pipeline_tasks).
-    fplan = plan_lib.lower_forward(m, n)
-    fp_micro = jnp.asarray(fplan.micro)
-    fp_valid = jnp.asarray(fplan.valid)
-
-    def tick_body(state, comms, outputs, resident, t, micro_row, valid_row,
-                  stream_buf=None):
-        state = _constrain_batch0(state)
-        outputs = _constrain_batch0(outputs, lead=1)
-        if streaming:
-            # stream_buf slot s holds micro-batch s*n + ((t + rank) mod n):
-            # after t one-hop rotations, rank 0's slot t//n is micro-batch t.
-            fresh = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, jnp.clip(t // n, 0, k - 1), 0, keepdims=False),
-                stream_buf)
-        else:
-            # micro_row[0] == min(t, m-1): stage 0's plan entry; other ranks
-            # ignore ``fresh`` (their stage_apply selects the carry).
-            fresh = _constrain_batch0(jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, micro_row[0], 0, keepdims=False), inputs_mb))
-        micro = micro_row[idx]
-        valid = valid_row[idx]
-        ctx = TickCtx(stage=idx, micro=micro, valid=valid, t=t, fresh=fresh,
-                      n_stages=n, n_micro=m)
-
-        # --- skip consumption --------------------------------------------
-        skips_in = {}
-        for s in skips:
-            if cfg.portals:
-                rd = None
-                for dst in s.dsts:
-                    v = ring_read(s, dst, comms[s.name][dst])
-                    rd = v if rd is None else _select(idx == dst, v, rd)
-                skips_in[s.name] = rd
-            else:
-                skips_in[s.name] = comms[s.name]
-
-        # --- compute -------------------------------------------------------
-        fn = checkpointing.wrap_stage(
-            lambda p, c, si, r: stage_apply(p, c, si, r, ctx), cfg.remat)
-        carry_out, skips_out, resident_new = fn(stage_params, state, skips_in,
-                                                resident)
-        # bubble ticks must not mutate resident state (KV caches etc.)
-        resident = _select(valid, resident_new, resident)
-
-        # --- sends -----------------------------------------------------------
-        if not cfg.overlap:
-            (carry_out,), = (_barrier(carry_out),)
-        carry_out = _constrain_batch0(carry_out)
-        state_next = _shift_chain(carry_out, n, axis)
-        comms_next = {}
-        for s in skips:
-            v = skips_out[s.name]
-            if cfg.portals:
-                recvs = portal_sends(s, v, axis)
-                comms_next[s.name] = {
-                    dst: ring_push(comms[s.name][dst], recvs[dst])
-                    for dst in s.dsts}
-            else:
-                # threaded: slot travels with the micro-batch, hop by hop
-                slot = _select(idx == s.src_stage, v, skips_in[s.name])
-                comms_next[s.name] = _shift_chain(slot, n, axis)
-
-        # --- output collection at the last stage --------------------------
-        slot_i = micro
-        take = jnp.logical_and(idx == n - 1, valid)
-
-        def upd(buf, y):
-            cur = jax.lax.dynamic_index_in_dim(buf, slot_i, 0, keepdims=False)
-            return jax.lax.dynamic_update_index_in_dim(
-                buf, jnp.where(take, y, cur), slot_i, 0)
-
-        outputs = jax.tree.map(upd, outputs, carry_out)
-
-        if streaming:
-            # rotate the input stream one rank towards stage 0 (full ring).
-            rot = [(i, (i - 1) % n) for i in range(n)]
-            stream_buf = jax.tree.map(
-                lambda a: jax.lax.ppermute(a, axis, rot), stream_buf)
-            return state_next, comms_next, outputs, resident, stream_buf
-        return state_next, comms_next, outputs, resident
-
-    stream0 = inputs_mb if streaming else None
-
-    if cfg.unroll_ticks:
-        state, comms, outputs, stream = carry0, comms0, outputs0, stream0
-        for t in range(T):
-            out = tick_body(state, comms, outputs, resident,
-                            jnp.asarray(t), fp_micro[t], fp_valid[t], stream)
-            if streaming:
-                state, comms, outputs, resident, stream = out
-            else:
-                state, comms, outputs, resident = out
-    else:
-        def scan_body(loop, xs):
-            t, micro_row, valid_row = xs
-            if streaming:
-                state, comms, outputs, resident, stream = loop
-                return tick_body(state, comms, outputs, resident, t,
-                                 micro_row, valid_row, stream), None
-            state, comms, outputs, resident = loop
-            return tick_body(state, comms, outputs, resident, t,
-                             micro_row, valid_row), None
-        init = ((carry0, comms0, outputs0, resident, stream0) if streaming
-                else (carry0, comms0, outputs0, resident))
-        final, _ = jax.lax.scan(scan_body, init,
-                                (jnp.arange(T), fp_micro, fp_valid))
-        outputs, resident = final[2], final[3]
-
-    return outputs, resident
-
-
-# ---------------------------------------------------------------------------
-# Fused schedule executor: forwards AND explicit-VJP backwards in one loop
-# ---------------------------------------------------------------------------
-
 def _oldjax_batch_axes(mesh, axis):
     """Old-jax fully-manual fallback: the non-pipe mesh axes become explicit
     batch parallelism.  Returns (axes, their size product)."""
@@ -344,191 +176,421 @@ def _masked_write(buf_tree, val_tree, slot, pred):
     return jax.tree.map(upd, buf_tree, val_tree)
 
 
+def _zeros_of(proto):
+    return jax.tree.map(
+        lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
+
+
+def _buf(depth, proto):
+    return jax.tree.map(
+        lambda c: jnp.zeros((depth,) + c.shape, c.dtype), proto)
+
+
+# ---------------------------------------------------------------------------
+# THE schedule executor — the repo's single tick loop
+# ---------------------------------------------------------------------------
+
 def run_pipeline_tasks(stage_apply: StageApplyFn,
                        stage_params,
-                       head_params,
                        inputs_mb,
-                       loss_args_mb,
                        cfg: ParallelConfig,
                        *,
                        tplan: plan_lib.TaskPlan,
-                       loss_fn,
+                       head_params=None,
+                       loss_args_mb=None,
+                       loss_fn=None,
+                       skip_protos: Optional[Dict[str, Any]] = None,
+                       resident=None,
                        carry_proto=None,
                        axis: str = PIPE_AXIS,
                        rank=None,
                        loss_scale: float = 1.0):
-    """Execute a full F+B task table (GPipe or 1F1B) for one mini-batch.
+    """Execute one event plan (forward-only, or fused F+B) for a mini-batch.
 
-    Unlike :func:`run_pipeline` (whose backward order is whatever autodiff
-    induces — the GPipe reverse clock-cycle), this executor runs *backward
-    tasks inside the primal loop*: a B tick pops the stashed boundary
-    activation, recomputes the stage forward inside ``jax.vjp`` (the paper's
-    Checkpoint/Recompute pairing, now structural), and ships the input
-    cotangent down the reverse ring.  That is what lets 1F1B drain
-    backwards early and bound the activation stash at ``min(n - j, m)``
-    instead of ``m`` — the buffer is sized by the plan
-    (``tplan.stash_depth``), so the memory win is structural.
+    Forward-only plans (``tplan.has_backward == False``) return
+    ``(outputs, resident)``: outputs is the ``[m, ...carry]`` collection at
+    the last rank (autodiff through this call induces the reverse
+    clock-cycle).  F+B plans return ``(loss_sum, stage_grads, head_grads,
+    input_grads_mb, resident)``: a B tick pops the stashed boundary
+    activation and parked skip operands, recomputes the stage forward
+    inside ``jax.vjp`` (the paper's Checkpoint/Recompute pairing, now
+    structural), and ships carry / skip cotangents down the reverse routes.
 
-    The last stage seeds each backward from ``loss_fn(head_params,
-    carry_out, loss_args[micro])``; losses accumulate in ascending micro
-    order on the last rank (identical in every schedule), and parameter
-    cotangents are collected per-micro and reduced in a fixed order
-    (``cfg.grad_reduce == "ordered"``), so any two schedules of the same
-    computation produce bitwise-identical losses and gradients.
-    ``grad_reduce == "running"`` instead folds cotangents in schedule order
-    — O(1) extra memory, but bit-exact only against itself.
+    Skip edges execute as plan-lowered routes: the destination parks the
+    portal value until its consuming forward and — under F+B — keeps it
+    parked for the consumer's backward recompute; skip cotangents travel
+    the mirrored reverse route and seed the producer's backward, summing
+    over destinations in fixed route order.  Resident state (KV caches) is
+    read/updated only on F ticks; a B recompute sees resident as a
+    non-differentiated constant, so gradient-relevant stage outputs must
+    not depend on resident slots mutated between F and B (per-micro caches
+    and fold-in statistics satisfy this by construction).
 
-    Returns ``(loss_sum, stage_grads, head_grads, input_grads_mb)``:
-    ``loss_sum`` is the un-normalized sum of per-micro losses on the last
-    rank; grads already include the ``loss_scale / n_micro`` seed.
+    With ``cfg.stream_inputs`` the ``inputs_mb`` argument is this rank's
+    ``[m // n, ...]`` shard of the micro-batches; the plan flags the ticks
+    after which the stream ring rotates one hop towards stage 0, and under
+    F+B the consumed slices are stashed alongside the activations so the
+    backward recompute replays the exact injected input.
+
+    Losses accumulate in ascending micro order on the last rank (identical
+    in every schedule) and parameter cotangents are collected per-micro and
+    reduced in a fixed order (``cfg.grad_reduce == "ordered"``), so any two
+    schedules of the same computation produce bitwise-identical losses and
+    gradients.  ``grad_reduce == "running"`` instead folds cotangents in
+    schedule order — O(1) extra memory, but bit-exact only against itself.
     """
     n, m = cfg.pipe, cfg.n_micro
     assert tplan.n_stages == n and tplan.n_micro == m
     T = tplan.n_ticks
+    fb = tplan.has_backward
     if rank is not None:
         idx = rank
     else:
         idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
-    if cfg.grad_reduce not in ("ordered", "running"):
-        raise ValueError(f"unknown grad_reduce {cfg.grad_reduce!r}; "
-                         "want 'ordered' or 'running'")
-    ordered = cfg.grad_reduce == "ordered"
-    seed = jnp.asarray(loss_scale / m, jnp.float32)
+    skip_protos = skip_protos or {}
+    resident = {} if resident is None else resident
+    routes = tplan.routes
+    skip_names = tuple(dict.fromkeys(rt.name for rt in routes))
+    for name in skip_names:
+        if name not in skip_protos:
+            raise ValueError(f"skip edge {name!r} has no proto")
+    streaming = cfg.stream_inputs and n > 1
+    k_stream = m // n if streaming else 0
 
-    def zeros_of(proto):
-        return jax.tree.map(
-            lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
+    if fb:
+        if loss_fn is None:
+            raise ValueError("F+B plans need a loss_fn")
+        if cfg.grad_reduce not in ("ordered", "running"):
+            raise ValueError(f"unknown grad_reduce {cfg.grad_reduce!r}; "
+                             "want 'ordered' or 'running'")
+        ordered = cfg.grad_reduce == "ordered"
+        seed = jnp.asarray(loss_scale / m, jnp.float32)
 
     if carry_proto is None:
         carry0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype),
                               inputs_mb)
     else:
-        carry0 = zeros_of(carry_proto)
-
-    def buf(depth, proto):
-        return jax.tree.map(
-            lambda c: jnp.zeros((depth,) + c.shape, c.dtype), proto)
-
+        carry0 = _zeros_of(carry_proto)
     fresh0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype),
                           inputs_mb)
-    stash0 = buf(tplan.stash_depth, carry0)
-    f_inbox0 = buf(tplan.f_inbox_depth, carry0)
-    b_inbox0 = buf(tplan.b_inbox_depth, carry0)
-    igbuf0 = buf(m, fresh0)
-    if ordered:
-        g_stage0 = buf(m, stage_params)
-        g_head0 = buf(m, head_params)
-    else:
-        g_stage0 = jax.tree.map(jnp.zeros_like, stage_params)
-        g_head0 = jax.tree.map(jnp.zeros_like, head_params)
-
-    zeros_carry = lambda: jax.tree.map(jnp.zeros_like, carry0)
-    zeros_fresh = lambda: jax.tree.map(jnp.zeros_like, fresh0)
-    zeros_p = lambda: jax.tree.map(jnp.zeros_like, stage_params)
-    zeros_h = lambda: jax.tree.map(jnp.zeros_like, head_params)
     is_last = idx == n - 1
 
-    def fwd_local(p_stage, carry_in, fresh, p_head, largs, micro, t):
-        ctx = TickCtx(stage=idx, micro=micro, valid=jnp.asarray(True), t=t,
-                      fresh=fresh, n_stages=n, n_micro=m)
-        carry_out, _, _ = stage_apply(p_stage, carry_in, {}, {}, ctx)
-        if not cfg.overlap:
-            (carry_out,), = (_barrier(carry_out),)
-        loss_i = jax.lax.cond(
-            is_last,
-            lambda: loss_fn(p_head, carry_out, largs).astype(jnp.float32),
-            lambda: jnp.zeros((), jnp.float32))
-        return carry_out, loss_i
+    # ---- scan state -------------------------------------------------------
+    st = {
+        "f_chain": _zeros_of(carry0),
+        "f_inbox": _buf(tplan.f_inbox_depth, carry0),
+        "resident": resident,
+        "routes": {rt.key: {"buf": _buf(rt.depth, skip_protos[rt.name]),
+                            "fly": _zeros_of(skip_protos[rt.name])}
+                   for rt in routes},
+    }
+    if streaming:
+        st["stream"] = inputs_mb
+    if fb:
+        st["b_chain"] = _zeros_of(carry0)
+        st["b_inbox"] = _buf(tplan.b_inbox_depth, carry0)
+        st["stash"] = _buf(max(tplan.stash_depth, 1), carry0)
+        st["loss"] = jnp.zeros((), jnp.float32)
+        st["g_stage"] = (_buf(m, stage_params) if ordered
+                         else jax.tree.map(jnp.zeros_like, stage_params))
+        st["g_head"] = (_buf(m, head_params) if ordered
+                        else jax.tree.map(jnp.zeros_like, head_params))
+        st["igbuf"] = _buf(m, fresh0)
+        if streaming:
+            st["fstash"] = _buf(max(tplan.stash_depth, 1), fresh0)
+        for rt in routes:
+            st["routes"][rt.key]["gbuf"] = _buf(rt.g_depth,
+                                                skip_protos[rt.name])
+            st["routes"][rt.key]["gfly"] = _zeros_of(skip_protos[rt.name])
+    else:
+        st["outputs"] = _buf(m, carry0)
+        # the stream shard's batch dim is also at 1 ([k, mb, ...]), so one
+        # constraint covers both input modes before slicing / rotating.
+        inputs_mb = _constrain_batch0(inputs_mb, lead=1)
+        if streaming:
+            st["stream"] = inputs_mb
 
-    def nop_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
-        return (zeros_carry(), zeros_carry(), zeros_p(), zeros_h(),
-                zeros_fresh(), jnp.zeros((), jnp.float32))
+    # ---- per-tick plan rows ----------------------------------------------
+    xs = {
+        "t": jnp.arange(T),
+        "kind": jnp.asarray(tplan.kind),
+        "micro": jnp.asarray(tplan.micro),
+        "ss": jnp.asarray(tplan.stash_slot),
+        "frs": jnp.asarray(tplan.f_recv_slot),
+        "frd": jnp.asarray(tplan.f_read_slot),
+        "brs": jnp.asarray(tplan.b_recv_slot),
+        "brd": jnp.asarray(tplan.b_read_slot),
+        "rot": jnp.asarray(tplan.stream_rot),
+        "routes": {rt.key: {"send": jnp.asarray(rt.send),
+                            "recv": jnp.asarray(rt.recv),
+                            "read": jnp.asarray(rt.read),
+                            "g_send": jnp.asarray(rt.g_send),
+                            "g_recv": jnp.asarray(rt.g_recv),
+                            "g_read": jnp.asarray(rt.g_read)}
+                   for rt in routes},
+    }
 
-    def f_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
-        carry_out, loss_i = fwd_local(stage_params, x_f, fresh, head_params,
-                                      largs, micro, t)
-        return (carry_out, zeros_carry(), zeros_p(), zeros_h(),
-                zeros_fresh(), loss_i)
+    def normalize_skips(skips_out):
+        """Stage skips_out -> exactly the declared names (protos' dtypes)."""
+        out = {}
+        for name in skip_names:
+            proto = skip_protos[name]
+            if skips_out and name in skips_out:
+                out[name] = jax.tree.map(
+                    lambda v, p: v.astype(p.dtype), skips_out[name], proto)
+            else:
+                out[name] = _zeros_of(proto)
+        return out
 
-    def b_branch(x_f, stash_v, fresh, largs, bseed, micro, t):
-        def f(p, c, fr, ph):
-            return fwd_local(p, c, fr, ph, largs, micro, t)
-        # jax.vjp recomputes the stage forward from the stashed boundary
-        # input and applies the cotangent immediately — remat-before-
-        # backward with no residuals carried across ticks.
-        _, vjp = jax.vjp(f, stage_params, stash_v, fresh, head_params)
-        loss_bar = jnp.where(is_last, seed, 0.0).astype(jnp.float32)
-        g_p, g_c, g_fr, g_ph = vjp((bseed, loss_bar))
-        return (zeros_carry(), g_c, g_p, g_ph, g_fr,
-                jnp.zeros((), jnp.float32))
+    def zeros_skips():
+        return {name: _zeros_of(skip_protos[name]) for name in skip_names}
 
-    def tick_body(state, xs):
-        (f_chain, b_chain, stash, f_inbox, b_inbox, loss_acc,
-         g_stage, g_head, igbuf) = state
-        t, kind_r, micro_r, ss_r, frs_r, frd_r, brs_r, brd_r = xs
-        kind = kind_r[idx]
-        micro = micro_r[idx]
-        ss, frs, frd = ss_r[idx], frs_r[idx], frd_r[idx]
-        brs, brd = brs_r[idx], brd_r[idx]
+    def tick_body(st, xt):
+        t = xt["t"]
+        kind = xt["kind"][idx]
+        micro = xt["micro"][idx]
+        ss = xt["ss"][idx]
+        frs, frd = xt["frs"][idx], xt["frd"][idx]
 
-        # 1. park ring arrivals in the inboxes
-        f_inbox = _masked_write(f_inbox, f_chain, frs, frs >= 0)
-        b_inbox = _masked_write(b_inbox, b_chain, brs, brs >= 0)
+        # 1. park ring / route arrivals in their plan-assigned slots
+        f_inbox = _masked_write(st["f_inbox"], st["f_chain"], frs, frs >= 0)
+        rst = {}
+        for rt in routes:
+            rx = xt["routes"][rt.key]
+            rs = st["routes"][rt.key]
+            rc = rx["recv"][idx]
+            entry = {"buf": _masked_write(rs["buf"], rs["fly"], rc, rc >= 0)}
+            if fb:
+                grc = rx["g_recv"][idx]
+                entry["gbuf"] = _masked_write(rs["gbuf"], rs["gfly"], grc,
+                                              grc >= 0)
+            rst[rt.key] = entry
+        if fb:
+            brs, brd = xt["brs"][idx], xt["brd"][idx]
+            b_inbox = _masked_write(st["b_inbox"], st["b_chain"], brs,
+                                    brs >= 0)
 
         # 2. gather this tick's operands
-        x_f = _select(frd >= 0, _dyn_read(f_inbox, frd), zeros_carry())
-        stash_v = _dyn_read(stash, ss)
-        bseed = _select(brd >= 0, _dyn_read(b_inbox, brd), zeros_carry())
-        fresh = jax.tree.map(
-            lambda a: jax.lax.dynamic_index_in_dim(a, micro, 0,
-                                                   keepdims=False), inputs_mb)
-        largs = jax.tree.map(
-            lambda a: jax.lax.dynamic_index_in_dim(a, micro, 0,
-                                                   keepdims=False),
-            loss_args_mb)
+        x_f = _select(frd >= 0, _dyn_read(f_inbox, frd), _zeros_of(carry0))
+        if not fb:
+            x_f = _constrain_batch0(x_f)
+        skips_in = zeros_skips()
+        for rt in routes:
+            rd = xt["routes"][rt.key]["read"][idx]
+            skips_in[rt.name] = _select(
+                rd >= 0, _dyn_read(rst[rt.key]["buf"], rd),
+                skips_in[rt.name])
+        if streaming:
+            # stage 0's task micro sits in slot micro//n after the plan's
+            # rotations; other ranks read (and mask out) a sibling slice.
+            slot = jnp.clip(xt["micro"][0] // n, 0, max(k_stream - 1, 0))
+            fresh_f = _dyn_read(st["stream"], slot)
+        else:
+            fresh_f = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, micro, 0, keepdims=False), inputs_mb)
+            if not fb:
+                fresh_f = _constrain_batch0(fresh_f)
+        resident = st["resident"]
+
+        if fb:
+            stash_v = _dyn_read(st["stash"], ss)
+            bseed = _select(brd >= 0, _dyn_read(b_inbox, brd),
+                            _zeros_of(carry0))
+            fresh_b = (_dyn_read(st["fstash"], ss) if streaming else fresh_f)
+            largs = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, micro, 0, keepdims=False), loss_args_mb)
+            skip_seeds = zeros_skips()
+            for rt in routes:
+                gr = xt["routes"][rt.key]["g_read"][idx]
+                add = _select(gr >= 0, _dyn_read(rst[rt.key]["gbuf"], gr),
+                              _zeros_of(skip_protos[rt.name]))
+                skip_seeds[rt.name] = jax.tree.map(
+                    jnp.add, skip_seeds[rt.name], add)
 
         # 3. run exactly one task (XLA conditional: no masked double work)
-        send_f, send_b, g_p, g_ph, g_fr, loss_i = jax.lax.switch(
-            kind, (nop_branch, f_branch, b_branch),
-            x_f, stash_v, fresh, largs, bseed, micro, t)
+        if fb:
+            def apply_stage(p, c, si, fr, ph):
+                ctx = TickCtx(stage=idx, micro=micro,
+                              valid=jnp.asarray(True), t=t, fresh=fr,
+                              n_stages=n, n_micro=m)
+                carry_out, skips_out, res_new = stage_apply(p, c, si,
+                                                            resident, ctx)
+                if not cfg.overlap:
+                    (carry_out,), = (_barrier(carry_out),)
+                loss_i = jax.lax.cond(
+                    is_last,
+                    lambda: loss_fn(ph, carry_out, largs).astype(jnp.float32),
+                    lambda: jnp.zeros((), jnp.float32))
+                return carry_out, normalize_skips(skips_out), loss_i, res_new
+
+            def nop_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
+                           res):
+                return (_zeros_of(carry0), _zeros_of(carry0), zeros_skips(),
+                        zeros_skips(), jax.tree.map(jnp.zeros_like,
+                                                    stage_params),
+                        jax.tree.map(jnp.zeros_like, head_params),
+                        _zeros_of(fresh0), jnp.zeros((), jnp.float32), res)
+
+            def f_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
+                         res):
+                carry_out, skip_vals, loss_i, res_new = apply_stage(
+                    stage_params, x_f, skips_v, fr_f, head_params)
+                return (carry_out, _zeros_of(carry0), skip_vals,
+                        zeros_skips(), jax.tree.map(jnp.zeros_like,
+                                                    stage_params),
+                        jax.tree.map(jnp.zeros_like, head_params),
+                        _zeros_of(fresh0), loss_i, res_new)
+
+            def b_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
+                         res):
+                def f(p, c, si, fr, ph):
+                    carry_out, skip_vals, loss_i, _ = apply_stage(
+                        p, c, si, fr, ph)
+                    return carry_out, skip_vals, loss_i
+                # jax.vjp recomputes the stage forward from the stashed
+                # boundary input + parked skip operands and applies the
+                # cotangents immediately — remat-before-backward with no
+                # residuals carried across ticks.
+                _, vjp = jax.vjp(f, stage_params, stash_v, skips_v, fr_b,
+                                 head_params)
+                loss_bar = jnp.where(is_last, seed, 0.0).astype(jnp.float32)
+                g_p, g_c, g_si, g_fr, g_ph = vjp((bseed, seeds, loss_bar))
+                return (_zeros_of(carry0), g_c, zeros_skips(), g_si, g_p,
+                        g_ph, g_fr, jnp.zeros((), jnp.float32), res)
+
+            (carry_send, b_send, skip_vals, skip_gvals, g_p, g_ph, g_fr,
+             loss_i, res_new) = jax.lax.switch(
+                kind, (nop_branch, f_branch, b_branch),
+                x_f, stash_v, skips_in, fresh_f, fresh_b, bseed,
+                skip_seeds, resident)
+        else:
+            ctx = TickCtx(stage=idx, micro=micro, valid=kind == plan_lib.FWD,
+                          t=t, fresh=fresh_f, n_stages=n, n_micro=m)
+            wrapped = checkpointing.wrap_stage(
+                lambda p, c, si, r: stage_apply(p, c, si, r, ctx), cfg.remat)
+
+            def nop_branch(x_f, skips_v, res):
+                return _zeros_of(carry0), zeros_skips(), res
+
+            def f_branch(x_f, skips_v, res):
+                carry_out, skips_out, res_new = wrapped(stage_params, x_f,
+                                                        skips_v, res)
+                if not cfg.overlap:
+                    (carry_out,), = (_barrier(carry_out),)
+                return (_constrain_batch0(carry_out),
+                        normalize_skips(skips_out), res_new)
+
+            carry_send, skip_vals, res_new = jax.lax.switch(
+                kind, (nop_branch, f_branch), x_f, skips_in, resident)
 
         # 4. commit state
-        loss_acc = loss_acc + loss_i
-        is_b = kind == plan_lib.BWD
-        stash = _masked_write(stash, x_f, ss, (kind == plan_lib.FWD)
-                              & (ss >= 0))
-        if ordered:
-            g_stage = _masked_write(g_stage, g_p, micro, is_b)
-            g_head = _masked_write(g_head, g_ph, micro, is_b & is_last)
+        out = {"resident": res_new, "routes": {}}
+        is_f = kind == plan_lib.FWD
+        if fb:
+            is_b = kind == plan_lib.BWD
+            out["loss"] = st["loss"] + loss_i
+            out["stash"] = _masked_write(st["stash"], x_f, ss,
+                                         is_f & (ss >= 0))
+            if streaming:
+                out["fstash"] = _masked_write(st["fstash"], fresh_f, ss,
+                                              is_f & (ss >= 0))
+            if ordered:
+                out["g_stage"] = _masked_write(st["g_stage"], g_p, micro,
+                                               is_b)
+                out["g_head"] = _masked_write(st["g_head"], g_ph, micro,
+                                              is_b & is_last)
+            else:
+                out["g_stage"] = jax.tree.map(jnp.add, st["g_stage"], g_p)
+                out["g_head"] = jax.tree.map(jnp.add, st["g_head"], g_ph)
+            out["igbuf"] = _masked_write(st["igbuf"], g_fr, micro,
+                                         is_b & (idx == 0))
+            out["b_inbox"] = b_inbox
+            out["b_chain"] = _shift_chain_rev(b_send, n, axis)
         else:
-            g_stage = jax.tree.map(jnp.add, g_stage, g_p)
-            g_head = jax.tree.map(jnp.add, g_head, g_ph)
-        igbuf = _masked_write(igbuf, g_fr, micro, is_b & (idx == 0))
-        f_chain = _shift_chain(send_f, n, axis)
-        b_chain = _shift_chain_rev(send_b, n, axis)
-        return (f_chain, b_chain, stash, f_inbox, b_inbox, loss_acc,
-                g_stage, g_head, igbuf), None
+            out["outputs"] = _constrain_batch0(
+                _masked_write(st["outputs"], carry_send, micro,
+                              is_f & is_last), lead=1)
+        out["f_inbox"] = f_inbox
+        out["f_chain"] = _shift_chain(carry_send, n, axis)
 
-    init = (zeros_carry(), zeros_carry(), stash0, f_inbox0, b_inbox0,
-            jnp.zeros((), jnp.float32), g_stage0, g_head0, igbuf0)
-    xs = (jnp.arange(T), jnp.asarray(tplan.kind), jnp.asarray(tplan.micro),
-          jnp.asarray(tplan.stash_slot), jnp.asarray(tplan.f_recv_slot),
-          jnp.asarray(tplan.f_read_slot), jnp.asarray(tplan.b_recv_slot),
-          jnp.asarray(tplan.b_read_slot))
+        # 5. skip-route hops (static single-pair / chain permutes)
+        for rt in routes:
+            rx = xt["routes"][rt.key]
+            entry = rst[rt.key]
+            sv = rx["send"][idx]
+            val = _select(sv == plan_lib.SEND_STAGE, skip_vals[rt.name],
+                          _dyn_read(entry["buf"], sv))
+            entry["fly"] = _route_hop(val, rt.fwd_perm, axis)
+            if fb:
+                gv = rx["g_send"][idx]
+                gval = _select(gv == plan_lib.SEND_STAGE,
+                               skip_gvals[rt.name],
+                               _dyn_read(entry["gbuf"], gv))
+                entry["gfly"] = _route_hop(gval, rt.bwd_perm, axis)
+            out["routes"][rt.key] = entry
+
+        # 6. rotate the input stream one rank towards stage 0 on the
+        #    plan-flagged ticks (keeps rotation count == injected micros)
+        if streaming:
+            rot = [(i, (i - 1) % n) for i in range(n)]
+            spun = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis, rot), st["stream"])
+            out["stream"] = _select(xt["rot"], spun, st["stream"])
+        return out, None
+
     if cfg.unroll_ticks:
-        state = init
+        state = st
         for t in range(T):
-            state, _ = tick_body(state, tuple(x[t] for x in xs))
+            state, _ = tick_body(state, jax.tree.map(lambda a: a[t], xs))
     else:
-        state, _ = jax.lax.scan(tick_body, init, xs)
-    loss_acc, g_stage, g_head, igbuf = state[5], state[6], state[7], state[8]
+        state, _ = jax.lax.scan(tick_body, st, xs)
+
+    if not fb:
+        return state["outputs"], state["resident"]
+    loss_acc = state["loss"]
+    g_stage, g_head, igbuf = state["g_stage"], state["g_head"], state["igbuf"]
     if ordered:
         # fixed-order reduction over the micro axis: the sum is identical
         # for every schedule, making gradients schedule-bitwise-stable.
         g_stage = jax.tree.map(lambda a: jnp.sum(a, axis=0), g_stage)
         g_head = jax.tree.map(lambda a: jnp.sum(a, axis=0), g_head)
-    return loss_acc, g_stage, g_head, igbuf
+    return loss_acc, g_stage, g_head, igbuf, state["resident"]
 
+
+def run_pipeline(stage_apply: StageApplyFn,
+                 stage_params,
+                 inputs_mb,
+                 cfg: ParallelConfig,
+                 *,
+                 skips: Sequence[SkipSpec] = (),
+                 skip_protos: Optional[Dict[str, Any]] = None,
+                 resident=None,
+                 carry_proto=None,
+                 axis: str = PIPE_AXIS,
+                 rank=None):
+    """Forward-only wrapper: lower the GPipe clock-cycle plan and run it.
+
+    ``jax.grad`` through this call induces the reverse clock-cycle with
+    recompute-before-backward (the legacy semantics); the loop itself is
+    :func:`run_pipeline_tasks` on a ``gpipe_fwd`` plan — there is no
+    separate forward tick loop any more.
+
+    Returns ``(outputs [m, ...carry], resident)`` — outputs valid on the
+    last rank.
+    """
+    tplan = plan_lib.plan_for("gpipe_fwd", cfg.n_micro, cfg.pipe,
+                              skips=skips, portals=cfg.portals)
+    return run_pipeline_tasks(stage_apply, stage_params, inputs_mb, cfg,
+                              tplan=tplan, skip_protos=skip_protos,
+                              resident=resident, carry_proto=carry_proto,
+                              axis=axis, rank=rank)
+
+
+# ---------------------------------------------------------------------------
+# Fused-schedule training entry point (F+B plans)
+# ---------------------------------------------------------------------------
 
 def pipeline_grad_call(stage_apply: StageApplyFn,
                        *,
@@ -536,11 +598,14 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                        cfg: ParallelConfig,
                        loss_fn,
                        carry_proto=None,
+                       skips: Sequence[SkipSpec] = (),
+                       skip_protos: Optional[Dict[str, Any]] = None,
                        axis: str = PIPE_AXIS):
     """Build the fused schedule-driven training call.
 
-    Returns ``call(stage_params, head_params, inputs_mb, loss_args_mb) ->
-    (loss, stage_grads, head_grads, input_grads_mb)`` where:
+    Returns ``call(stage_params, head_params, inputs_mb, loss_args_mb,
+    resident=None) -> (loss, stage_grads, head_grads, input_grads_mb)``
+    where:
 
     * ``loss`` is the mean per-micro loss (matches ``head_loss`` over the
       full batch up to micro-chunked summation order),
@@ -548,21 +613,34 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
       over ``pipe``),
     * ``head_grads`` mirrors ``head_params`` (valid on the last rank),
     * ``input_grads_mb`` mirrors ``inputs_mb`` ([m, ...], valid on rank 0)
-      — feed it to the embed VJP outside the pipeline.
+      — feed it to the embed VJP outside the pipeline.  Skip cotangents a
+      stage-0 producer routes into its fresh input (e.g. the enc-dec
+      ``dec_in`` portal) are folded in here as well.
 
     The schedule comes from ``cfg.schedule``: ``"1f1b"`` or
     ``"gpipe"``/``"gpipe_tasked"`` — both lowered by
     :func:`repro.core.plan.plan_for` from the validated task tables in
-    :mod:`repro.core.schedules`.  Skip edges and resident state are not
-    supported in the fused executor (use the autodiff path).
+    :mod:`repro.core.schedules`.  Skip edges lower to portal/threaded
+    routes per ``cfg.portals``; ``cfg.stream_inputs`` (with ``m % n == 0``)
+    shards the micro-batches over pipe and injects them on plan ticks.
     """
     n, m = cfg.pipe, cfg.n_micro
-    tplan = plan_lib.plan_for(cfg.schedule, m, n)
+    streaming = cfg.stream_inputs and n > 1
+    if streaming and m % n:
+        # don't silently drop a memory knob: streaming shards the
+        # micro-batches over pipe, which needs m % n == 0
+        raise ValueError(f"stream_inputs needs n_micro ({m}) divisible by "
+                         f"pipe ({n})")
+    cfg = cfg.with_(stream_inputs=streaming)
+    tplan = plan_lib.plan_for(cfg.schedule, m, n, skips=skips,
+                              portals=cfg.portals)
 
     def inner(rank_arr, params, head_params, inputs_mb, loss_args_mb,
               bdiv=1, psum_axes=()):
         with compat.manual_region():
             params = jax.tree.map(lambda a: a[0], params)
+            if streaming:
+                inputs_mb = jax.tree.map(lambda a: a[0], inputs_mb)
 
             def localize(proto):
                 if proto is None or bdiv == 1:
@@ -572,9 +650,13 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                         (p.shape[0] // bdiv,) + tuple(p.shape[1:]), p.dtype),
                     proto)
 
-            loss_sum, g_stage, g_head, ig = run_pipeline_tasks(
-                stage_apply, params, head_params, inputs_mb, loss_args_mb,
-                cfg, tplan=tplan, loss_fn=loss_fn,
+            sk_protos = {kk: localize(v)
+                         for kk, v in (skip_protos or {}).items()}
+            loss_sum, g_stage, g_head, ig, _ = run_pipeline_tasks(
+                stage_apply, params, inputs_mb, cfg,
+                tplan=tplan, head_params=head_params,
+                loss_args_mb=loss_args_mb, loss_fn=loss_fn,
+                skip_protos=sk_protos,
                 carry_proto=localize(carry_proto), axis=axis,
                 rank=rank_arr[0], loss_scale=1.0 / bdiv)
             if psum_axes:
@@ -591,9 +673,15 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
 
     def call(stage_params, head_params, inputs_mb, loss_args_mb):
         rank_arr = jnp.arange(n, dtype=jnp.int32)
+        if streaming:
+            k = m // n
+            inputs_mb = jax.tree.map(
+                lambda a: a.reshape((k, n) + a.shape[1:]).swapaxes(0, 1),
+                inputs_mb)
         if cfg.pipe > 1:
             axis_names = {axis}
-            in_spec_x = in_spec_l = P()
+            in_spec_x = P(axis) if streaming else P()
+            in_spec_l = P()
             out_spec_ig = P(axis)
             bdiv, psum_axes = 1, ()
             if not compat.JAX_HAS_NEW_API:
@@ -602,13 +690,17 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                 axis_names = set(mesh.axis_names)
                 baxes, nd = _oldjax_batch_axes(mesh, axis)
                 if nd > 1:
-                    leaves = (jax.tree.leaves(inputs_mb)
-                              + jax.tree.leaves(loss_args_mb))
-                    if not all(l.ndim > 1 and l.shape[1] % nd == 0
-                               for l in leaves):
+                    bdim_in = 2 if streaming else 1
+                    leaves = jax.tree.leaves(inputs_mb)
+                    if not (all(l.ndim > bdim_in and l.shape[bdim_in] % nd == 0
+                                for l in leaves)
+                            and all(l.ndim > 1 and l.shape[1] % nd == 0
+                                    for l in jax.tree.leaves(loss_args_mb))):
                         raise _oldjax_divisibility_error(nd)
                     bdiv, psum_axes = nd, baxes
-                    in_spec_x = in_spec_l = P(None, baxes)
+                    in_spec_x = (P(axis, None, baxes) if streaming
+                                 else P(None, baxes))
+                    in_spec_l = P(None, baxes)
                     out_spec_ig = P(axis, None, baxes)
             fn = shard_map(
                 functools.partial(inner, bdiv=bdiv, psum_axes=psum_axes),
@@ -629,7 +721,7 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
 
 
 # ---------------------------------------------------------------------------
-# shard_map wrapper: the public entry point
+# shard_map wrapper: the public forward entry point
 # ---------------------------------------------------------------------------
 
 def pipeline_call(stage_apply: StageApplyFn,
@@ -655,8 +747,8 @@ def pipeline_call(stage_apply: StageApplyFn,
     #    AllReducePromotion in bf16, so the inputs cross in fp32.
     #  * streaming (cfg.stream_inputs, m % n == 0): micro-batches are
     #    SHARDED over pipe (micro-batch i at rank i%n, slot i//n) and
-    #    rotated one hop per tick; the transpose is a reverse rotation (no
-    #    psum), memory drops by n, and bf16 is safe.
+    #    rotated one hop per plan tick; the transpose is a reverse rotation
+    #    (no psum), memory drops by n, and bf16 is safe.
     def inner(rank_arr, params, inputs_mb, resident, in_dtypes, cfg_run,
               bdiv=1):
         def localize(proto):

@@ -1,29 +1,51 @@
-"""Lowering: schedule task tables -> per-rank, per-tick static plans.
+"""Lowering: schedule task tables -> per-rank, per-tick static event plans.
 
 :mod:`repro.core.schedules` is the single source of truth for execution
 order: it builds task tables (lists of ticks, each tick a list of
 ``Task("F"|"B", micro, stage)``) and proves them against the paper's
 dependency graph (``schedules.validate``).  This module lowers a validated
-table to the *static* per-rank arrays the compiled tick loop consumes:
+table to the *static* per-rank arrays the compiled tick loop
+(:func:`repro.core.pipeline.run_pipeline_tasks`) consumes.  There is exactly
+one executor; every workload — plain LM, skip-connection (U-Net / enc-dec),
+resident-state serving, streamed inputs — runs a :class:`TaskPlan`.
 
-* :func:`lower_forward` — the forward-only plan for :func:`run_pipeline`
-  (autodiff-backward execution).  ``micro[t, j]`` / ``valid[t, j]`` replace
-  the hard-coded ``F_{t-j, j}`` arithmetic of paper Algorithm 1.
+A plan carries four event families, all resolved at lowering time:
 
-* :func:`lower_tasks` — the full F+B plan for the fused scheduler
-  (``run_pipeline_tasks``), which executes forwards *and* explicit-VJP
-  backwards in one loop.  Besides task kind/micro it allocates three static
-  buffer disciplines, all sized at lowering time:
+* **tasks** — ``kind[t, j]`` / ``micro[t, j]``: which F/B task rank ``j``
+  runs at tick ``t`` (NOP during bubbles).  Forward-only plans
+  (``has_backward=False``) contain only F tasks and are what inference /
+  autodiff-backward execution lowers to.
 
-  - an **activation stash** per stage (the paper's "stashed activations"):
-    F writes its boundary input, the matching B reads and frees it.  Slots
-    are assigned by a free-list walk, so the high-water mark per stage is
-    *exactly* ``schedules.peak_stash`` — ``m`` for GPipe, ``min(n - j, m)``
-    for 1F1B.  The SPMD buffer depth is the max over stages.
-  - a forward **inbox** per rank: the ring shift delivers rank ``j-1``'s
-    F output one tick after it is produced, possibly several ticks before
-    rank ``j`` consumes it (1F1B interleaves); arrivals park in inbox slots.
-  - a backward inbox, symmetric, for cotangents travelling ``j+1 -> j``.
+* **activation stash** (the paper's "stashed activations"): F writes its
+  boundary input, the matching B reads and frees it.  Slots are assigned by
+  a per-stage free-list walk, so the high-water mark per stage is *exactly*
+  ``schedules.peak_stash`` — ``m`` for GPipe, ``min(n - j, m)`` for 1F1B.
+  The SPMD buffer depth is the max over stages; masked slot writes keep
+  rank ``j`` inside its own ``per_stage_stash[j]`` prefix, so the
+  *structural* footprint (what a per-device allocator would charge) is the
+  per-stage bound even though the XLA buffer is uniform.
+
+* **inboxes** — the ring shift delivers rank ``j-1``'s F output one tick
+  after it is produced, possibly several ticks before rank ``j`` consumes
+  it (1F1B interleaves); arrivals park in inbox slots.  A backward inbox,
+  symmetric, holds cotangents travelling ``j+1 -> j``.
+
+* **skip routes** (:class:`RoutePlan`, lowered from ``SkipSpec`` edges,
+  paper §3.3): one route per (edge, destination).  Portal mode sends the
+  value directly ``src -> dst`` with a single-pair collective-permute;
+  threaded mode relays it hop-by-hop through every intermediate rank (the
+  §3.3 symptomatic case).  The destination *parks* the value until its
+  consuming forward — and, in F+B plans, keeps holding it until the
+  consumer's backward so the recompute-under-VJP sees the same operand
+  (what ``jax.grad`` through the legacy loop kept alive implicitly as a
+  checkpoint residual).  Cotangent routes mirror the value routes in
+  reverse, seeding the producer's backward.
+
+* **stream injection** (``stream_rot``) — with ``cfg.stream_inputs`` the
+  micro-batches are sharded over pipe and rotated one hop towards stage 0;
+  the plan flags exactly the ticks where stage 0 consumes a fresh
+  micro-batch, so the rotation count stays aligned with the schedule even
+  when stage 0's forwards are not consecutive (1F1B steady state).
 
 Every array is ``[n_ticks, n]`` host-side numpy, turned into constants of
 the compiled program; nothing about the order is decided at runtime.
@@ -37,44 +59,53 @@ import numpy as np
 
 from repro.core import schedules
 from repro.core.schedules import Task
+from repro.core.skip import SkipSpec
+
+NOP, FWD, BWD = 0, 1, 2
+
+# sentinel for RoutePlan send arrays: transmit the value the stage produced
+# THIS tick (skips_out in forward routes, the VJP's skip cotangent in
+# backward routes) instead of a parked buffer slot.
+SEND_STAGE = -2
 
 
 @dataclass(frozen=True)
-class ForwardPlan:
-    """Forward-only schedule: which F task each rank runs at each tick."""
-    micro: np.ndarray       # [T, n] int32 (clamped to [0, m) on bubble ticks)
-    valid: np.ndarray       # [T, n] bool
-    n_ticks: int
-    n_stages: int
-    n_micro: int
+class RoutePlan:
+    """Lowered transfer schedule for one (skip edge, destination) flow.
 
-
-def lower_forward(m: int, n: int) -> ForwardPlan:
-    """Lower the deterministic clock-cycle (Algorithm 1) to plan arrays.
-
-    Bubble entries keep the clamped ``t - j`` index the legacy inline
-    arithmetic used, so masked compute is bit-identical to the old loop.
+    ``send``/``recv``/``read`` are ``[T, n]`` int32: ``send`` is
+    :data:`SEND_STAGE` on the tick a rank transmits its freshly produced
+    value, a slot index when it relays a parked value (threaded hops), and
+    ``-1`` otherwise; ``recv`` parks the in-flight value into a buffer slot
+    the tick after the hop; ``read`` feeds a parked slot to the stage
+    compute (the consuming F, and — in F+B plans — the matching B's
+    recompute).  ``g_send``/``g_recv``/``g_read`` mirror them for the
+    cotangent flowing ``dst -> src``; ``g_read`` marks the producer's B
+    tick, where the parked cotangent seeds ``skips_out``'s VJP.
     """
-    table = list(schedules.clock_cycles(m, n))
-    T = len(table)
-    micro = np.zeros((T, n), np.int32)
-    valid = np.zeros((T, n), bool)
-    for t in range(T):
-        for j in range(n):
-            micro[t, j] = min(max(t - j, 0), m - 1)
-        for task in table[t]:
-            assert task.kind == "F"
-            micro[t, task.stage] = task.micro
-            valid[t, task.stage] = True
-    return ForwardPlan(micro, valid, T, n, m)
+    name: str
+    src: int
+    dst: int
+    threaded: bool
+    fwd_perm: Tuple[Tuple[int, int], ...]   # static ppermute pairs, value hop
+    bwd_perm: Tuple[Tuple[int, int], ...]   # reverse pairs, cotangent hop
+    send: np.ndarray
+    recv: np.ndarray
+    read: np.ndarray
+    g_send: np.ndarray
+    g_recv: np.ndarray
+    g_read: np.ndarray
+    depth: int
+    g_depth: int
 
-
-NOP, FWD, BWD = 0, 1, 2
+    @property
+    def key(self) -> str:
+        return f"{self.name}@{self.dst}"
 
 
 @dataclass(frozen=True)
 class TaskPlan:
-    """Full fused-schedule plan (forwards + explicit-VJP backwards)."""
+    """Full fused-schedule event plan (the only executor input)."""
     kind: np.ndarray          # [T, n] 0=NOP 1=F 2=B
     micro: np.ndarray         # [T, n] micro index of the task (0 on NOP)
     stash_slot: np.ndarray    # [T, n] F: slot written; B: slot read; -1 else
@@ -82,6 +113,7 @@ class TaskPlan:
     f_read_slot: np.ndarray   # [T, n] F input inbox slot; -1 (stage 0/no F)
     b_recv_slot: np.ndarray   # [T, n] bwd-chain arrival -> inbox slot; -1
     b_read_slot: np.ndarray   # [T, n] B seed inbox slot; -1 (last stage/no B)
+    stream_rot: np.ndarray    # [T] bool: rotate the input stream after tick t
     n_ticks: int
     n_stages: int
     n_micro: int
@@ -89,6 +121,13 @@ class TaskPlan:
     f_inbox_depth: int
     b_inbox_depth: int
     per_stage_stash: Tuple[int, ...]   # high-water per stage == peak_stash
+    has_backward: bool = True
+    routes: Tuple[RoutePlan, ...] = ()
+
+    def per_stage_stash_bytes(self, bytes_per_micro: int) -> Tuple[int, ...]:
+        """Structural activation-stash footprint per stage (not flattened
+        to the SPMD max): ``min(n - j, m)`` micro-batches for 1F1B."""
+        return tuple(d * bytes_per_micro for d in self.per_stage_stash)
 
 
 class _SlotPool:
@@ -111,10 +150,125 @@ class _SlotPool:
         self.free.append(slot)
 
 
-def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int) -> TaskPlan:
-    """Lower a validated F/B task table to the fused executor's plan."""
+def _alloc_intervals(per_rank: Sequence[Sequence[Tuple[int, int, object]]]):
+    """Assign buffer slots to live intervals, one free-list per rank.
+
+    ``per_rank[j]`` is a list of ``(arrive_tick, last_use_tick, tag)``; a
+    slot is reusable strictly *after* its last-use tick (arrival parks at
+    the start of a tick, reads/sends happen later the same tick, so
+    same-tick reuse would clobber a live value).  Returns
+    ``({tag: slot}, depth)`` with depth the max high-water over ranks.
+    """
+    assign: Dict[object, int] = {}
+    depth = 0
+    for rank_events in per_rank:
+        pool = _SlotPool()
+        live: List[Tuple[int, object]] = []   # (last_use, tag)
+        for a, c, tag in sorted(rank_events, key=lambda e: (e[0], e[1])):
+            assert a <= c, f"interval arrives {a} after last use {c}"
+            for lu, tg in list(live):
+                if lu < a:
+                    pool.release(assign[tg])
+                    live.remove((lu, tg))
+            s = pool.alloc()
+            assign[tag] = s
+            live.append((c, tag))
+        depth = max(depth, pool.high)
+    return assign, depth
+
+
+def _lower_routes(t_of: Dict[Task, int], T: int, m: int, n: int,
+                  skips: Sequence[SkipSpec], portals: bool,
+                  has_backward: bool) -> Tuple[RoutePlan, ...]:
+    """Lower skip edges to per-(edge, dst) transfer schedules."""
+    routes = []
+    for spec in skips:
+        for dst in spec.dsts:
+            src = spec.src_stage
+            if portals:
+                hops = [(src, dst)]
+            else:
+                hops = [(j, j + 1) for j in range(src, dst)]
+            fwd_perm = tuple(hops)
+            bwd_perm = tuple((b, a) for a, b in reversed(hops))
+
+            send = np.full((T, n), -1, np.int32)
+            recv = np.full((T, n), -1, np.int32)
+            read = np.full((T, n), -1, np.int32)
+            g_send = np.full((T, n), -1, np.int32)
+            g_recv = np.full((T, n), -1, np.int32)
+            g_read = np.full((T, n), -1, np.int32)
+
+            iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(n)]
+            g_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(n)]
+            relays = [b for _, b in hops[:-1]]       # ranks that re-send
+            for i in range(m):
+                # ---- value: src -> (relays) -> dst --------------------
+                send[t_of[Task("F", i, src)], src] = SEND_STAGE
+                prev = src
+                for r in relays:
+                    arrive = t_of[Task("F", i, prev)] + 1
+                    resend = t_of[Task("F", i, r)]
+                    iv[r].append((arrive, resend, ("f", i, r)))
+                    prev = r
+                arrive = t_of[Task("F", i, prev)] + 1
+                consume = t_of[Task("F", i, dst)]
+                hold = (t_of[Task("B", i, dst)] if has_backward else consume)
+                iv[dst].append((arrive, hold, ("f", i, dst)))
+                # ---- cotangent: dst -> (relays) -> src ----------------
+                if has_backward:
+                    g_send[t_of[Task("B", i, dst)], dst] = SEND_STAGE
+                    prev = dst
+                    for r in reversed(relays):
+                        arrive = t_of[Task("B", i, prev)] + 1
+                        resend = t_of[Task("B", i, r)]
+                        g_iv[r].append((arrive, resend, ("b", i, r)))
+                        prev = r
+                    arrive = t_of[Task("B", i, prev)] + 1
+                    seed = t_of[Task("B", i, src)]
+                    g_iv[src].append((arrive, seed, ("b", i, src)))
+
+            assign, depth = _alloc_intervals(iv)
+            for i in range(m):
+                prev = src
+                for r in relays:
+                    s = assign[("f", i, r)]
+                    recv[t_of[Task("F", i, prev)] + 1, r] = s
+                    send[t_of[Task("F", i, r)], r] = s
+                    prev = r
+                s = assign[("f", i, dst)]
+                recv[t_of[Task("F", i, prev)] + 1, dst] = s
+                read[t_of[Task("F", i, dst)], dst] = s
+                if has_backward:
+                    read[t_of[Task("B", i, dst)], dst] = s
+
+            g_depth = 1
+            if has_backward:
+                g_assign, g_depth = _alloc_intervals(g_iv)
+                for i in range(m):
+                    prev = dst
+                    for r in reversed(relays):
+                        s = g_assign[("b", i, r)]
+                        g_recv[t_of[Task("B", i, prev)] + 1, r] = s
+                        g_send[t_of[Task("B", i, r)], r] = s
+                        prev = r
+                    s = g_assign[("b", i, src)]
+                    g_recv[t_of[Task("B", i, prev)] + 1, src] = s
+                    g_read[t_of[Task("B", i, src)], src] = s
+
+            routes.append(RoutePlan(
+                spec.name, src, dst, not portals, fwd_perm, bwd_perm,
+                send, recv, read, g_send, g_recv, g_read,
+                max(depth, 1), max(g_depth, 1)))
+    return tuple(routes)
+
+
+def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
+                skips: Sequence[SkipSpec] = (), portals: bool = True,
+                forward_only: bool = False) -> TaskPlan:
+    """Lower a validated task table to the fused executor's event plan."""
     schedules.validate(table, m, n, checkpoint=False,
-                       backward_micro_order=False)
+                       backward_micro_order=False, forward_only=forward_only)
     T = len(table)
     t_of: Dict[Task, int] = {}
     for t, tick in enumerate(table):
@@ -145,6 +299,8 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int) -> TaskPlan:
             j = task.stage
             kind[t, j] = FWD if task.kind == "F" else BWD
             micro[t, j] = task.micro
+            if forward_only:
+                continue
             if task.kind == "F":
                 s = stash_pools[j].alloc()
                 live[j][task.micro] = s
@@ -158,25 +314,14 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int) -> TaskPlan:
     # --- inboxes: hold ring-shift arrivals until the consuming tick --------
     def route(edges, recv, read):
         """edges: per-rank list of (arrival_tick, consume_tick)."""
-        depth = 0
+        assign, depth = _alloc_intervals(
+            [[(a, c, (j, a, c)) for a, c in rank_edges]
+             for j, rank_edges in enumerate(edges)])
         for j, rank_edges in enumerate(edges):
-            pool = _SlotPool()
-            for a, c in sorted(rank_edges):
-                assert a <= c, f"rank {j}: arrival {a} after consume {c}"
-            # replay in time order: arrivals allocate, consumes free
-            events = sorted([(a, 0, c) for a, c in rank_edges])
-            slot_of = {}
-            for a, _, c in events:
-                # free every slot whose consume tick has passed
-                for (aa, cc), s in list(slot_of.items()):
-                    if cc < a:
-                        pool.release(s)
-                        del slot_of[(aa, cc)]
-                s = pool.alloc()
-                slot_of[(a, c)] = s
+            for a, c in rank_edges:
+                s = assign[(j, a, c)]
                 recv[a, j] = s
                 read[c, j] = s
-            depth = max(depth, pool.high)
         return depth
 
     f_edges: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
@@ -185,26 +330,47 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int) -> TaskPlan:
         for j in range(1, n):
             f_edges[j].append((t_of[Task("F", i, j - 1)] + 1,
                                t_of[Task("F", i, j)]))
-        for j in range(n - 1):
-            b_edges[j].append((t_of[Task("B", i, j + 1)] + 1,
-                               t_of[Task("B", i, j)]))
+        if not forward_only:
+            for j in range(n - 1):
+                b_edges[j].append((t_of[Task("B", i, j + 1)] + 1,
+                                   t_of[Task("B", i, j)]))
     f_depth = route(f_edges, f_recv, f_read)
     b_depth = route(b_edges, b_recv, b_read)
 
+    # --- stream injection: rotate after each tick stage 0 consumes --------
+    stream_rot = (kind[:, 0] == FWD).copy()
+
     per_stage = tuple(p.high for p in stash_pools)
-    assert list(per_stage) == schedules.peak_stash(table, n, m), \
-        "stash allocator disagrees with schedules.peak_stash"
+    if not forward_only:
+        assert list(per_stage) == schedules.peak_stash(table, n, m), \
+            "stash allocator disagrees with schedules.peak_stash"
+    routes = _lower_routes(t_of, T, m, n, skips, portals,
+                           has_backward=not forward_only)
     return TaskPlan(kind, micro, stash_slot, f_recv, f_read, b_recv, b_read,
-                    T, n, m, max(per_stage), max(f_depth, 1),
-                    max(b_depth, 1), per_stage)
+                    stream_rot, T, n, m,
+                    max(per_stage) if per_stage else 0,
+                    max(f_depth, 1), max(b_depth, 1), per_stage,
+                    has_backward=not forward_only, routes=routes)
 
 
-def plan_for(schedule: str, m: int, n: int) -> TaskPlan:
-    """Build + lower the named schedule ("gpipe" or "1f1b")."""
+def plan_for(schedule: str, m: int, n: int, *,
+             skips: Sequence[SkipSpec] = (),
+             portals: bool = True) -> TaskPlan:
+    """Build + lower the named schedule.
+
+    ``"gpipe"``/``"gpipe_tasked"`` and ``"1f1b"`` produce full F+B plans
+    for the fused executor; ``"gpipe_fwd"`` produces the forward-only
+    clock-cycle plan (paper Algorithm 1) that inference and the
+    autodiff-backward path execute.
+    """
+    if schedule == "gpipe_fwd":
+        table = [list(tick) for tick in schedules.clock_cycles(m, n)]
+        return lower_tasks(table, m, n, skips=skips, portals=portals,
+                           forward_only=True)
     if schedule in ("gpipe", "gpipe_tasked"):
         table = schedules.gpipe_schedule(m, n, checkpoint=False)
     elif schedule == "1f1b":
         table = schedules.one_f_one_b_schedule(m, n)
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
-    return lower_tasks(table, m, n)
+    return lower_tasks(table, m, n, skips=skips, portals=portals)

@@ -146,7 +146,8 @@ def peak_stash(table: Sequence[Sequence[Task]], n: int, m: int) -> List[int]:
 def validate(table: Sequence[Sequence[Task]], m: int, n: int,
              *, checkpoint: bool = False,
              recompute_last_micro: bool = False,
-             backward_micro_order: bool = True) -> None:
+             backward_micro_order: bool = True,
+             forward_only: bool = False) -> None:
     """Assert the schedule respects every dependency in the paper's §2 graph.
 
     Raises AssertionError on: missing/duplicate tasks, F(i,j) before
@@ -157,6 +158,10 @@ def validate(table: Sequence[Sequence[Task]], m: int, n: int,
     ``backward_micro_order=False`` relaxes the B-side dashed-arrow order:
     1F1B deliberately drains early backwards (B[i] before B[i+1] at a
     stage), which is a *schedule choice* in GPipe, not a data dependency.
+
+    ``forward_only=True`` validates an inference / autodiff-backward plan:
+    the table must cover every F task and contain no B at all (the reverse
+    clock-cycle is induced outside the table).
     """
     seen = {}
     order = 0
@@ -173,16 +178,22 @@ def validate(table: Sequence[Sequence[Task]], m: int, n: int,
     expect_b = {Task("B", i, j) for i in range(m) for j in range(n)}
     have = set(seen)
     assert expect_f <= have, f"missing forwards: {sorted(expect_f - have)[:4]}"
-    assert expect_b <= have, f"missing backwards: {sorted(expect_b - have)[:4]}"
+    if forward_only:
+        assert not any(t.kind == "B" for t in have), \
+            "forward-only table contains backward tasks"
+    else:
+        assert expect_b <= have, \
+            f"missing backwards: {sorted(expect_b - have)[:4]}"
     for i in range(m):
         for j in range(n):
             if j > 0:
                 assert seen[Task("F", i, j - 1)] < seen[Task("F", i, j)]
-                assert seen[Task("B", i, j)] < seen[Task("B", i, j - 1)]
+                if not forward_only:
+                    assert seen[Task("B", i, j)] < seen[Task("B", i, j - 1)]
             if i > 0:
                 assert seen[Task("F", i - 1, j)] < seen[Task("F", i, j)], \
                     f"micro-batch order: F[{i-1},{j}] !< F[{i},{j}]"
-                if backward_micro_order:
+                if backward_micro_order and not forward_only:
                     assert seen[Task("B", i, j)] < seen[Task("B", i - 1, j)], \
                         f"micro-batch order: B[{i},{j}] !< B[{i-1},{j}]"
             if checkpoint:

@@ -1,39 +1,45 @@
 """Skip connections across pipeline stages — the paper's §3.3 "portals".
 
 A tensor produced at stage ``src`` and consumed at stage ``dst > src + 1``
-breaks the pure-sequential assumption.  torchgpipe offers two behaviours:
+breaks the pure-sequential assumption.  torchgpipe offers two behaviours,
+both of which lower to static transfer ROUTES in the unified schedule plan
+(:func:`repro.core.plan.lower_tasks`; executed by
+:func:`repro.core.pipeline.run_pipeline_tasks`):
 
-* **threaded** (the symptomatic §3.3 case): the tensor is packed into every
-  intermediate stage's input/output, i.e. copied hop-by-hop through all
-  devices in between.  In our SPMD pipeline this is a slot in the main carry
-  that travels with its micro-batch through every ``collective-permute`` hop.
+* **threaded** (the symptomatic §3.3 case): the tensor is relayed hop-by-hop
+  through every intermediate stage — each relay rank parks the arriving
+  value and re-sends it on its own F tick, so the intermediate devices
+  spend memory bandwidth and a ``collective-permute`` hop on it (the cost
+  the ablation benchmark measures).
 
-* **portals** (§3.3.1, PortalBlue/Orange/Copy): the tensor is sent *directly*
-  from ``src`` to ``dst``.  Here that is a dedicated single-pair
-  ``collective-permute([(src, dst)])`` issued at the production tick, plus a
-  destination-side ring buffer that holds the value until the owning
-  micro-batch arrives.  Intermediate *stages* spend no memory bandwidth or
-  kernel time on the tensor (on a physical ring the bits still traverse
-  intermediate links, exactly as they traverse PCIe switches in the paper's
-  setting — the win is freeing the intermediate devices, not the wires).
+* **portals** (§3.3.1, PortalBlue/Orange/Copy): the tensor is sent
+  *directly* from ``src`` to ``dst`` with a dedicated single-pair
+  ``collective-permute([(src, dst)])`` at the production tick.  The
+  destination parks it in a plan-allocated buffer slot until the owning
+  micro-batch's forward consumes it; intermediate *stages* spend no memory
+  bandwidth or kernel time on the tensor (on a physical ring the bits still
+  traverse intermediate links, exactly as they traverse PCIe switches in
+  the paper's setting — the win is freeing the intermediate devices, not
+  the wires).
 
-Timing: the value for micro-batch ``i`` is produced at ``src`` during tick
-``τ = i + src`` and pushed into the destination ring at the end of that tick.
-It is consumed at ``dst`` during tick ``i + dst = τ + (dst - src)``; between
-push and consume the ring advances ``dst - src - 1`` more times, so the value
-is read from slot ``dst - src - 1`` of a ring of depth ``dst - src``.
+Timing invariant (proved by ``tests/test_skip.py`` host-side): the value
+for micro-batch ``i`` is produced at ``src`` during ``F(i, src)``'s tick
+and consumed at ``dst`` during ``F(i, dst)``'s tick, so on the forward
+wavefront at most ``SkipSpec.depth(dst) = dst - src`` values are parked at
+once — the legacy rotating-ring depth, now an allocator output instead of
+an assumption.  Under fused F+B schedules the destination keeps the value
+parked until ``B(i, dst)``'s recompute, and a mirrored reverse route
+carries the skip cotangent back to seed ``B(i, src)``.
 
 Multi-consumer skips (e.g. whisper's encoder memory feeding every decoder
-stage) use one ring/permute per destination in portal mode but a single
-threaded slot otherwise.
+stage) lower to one route per destination; their backward cotangents sum
+at the producer in fixed route order, keeping gradients bitwise-stable
+across schedules.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -53,41 +59,3 @@ class SkipSpec:
 
     def depth(self, dst: int) -> int:
         return dst - self.src_stage
-
-
-def ring_init(spec: SkipSpec, proto) -> Dict[int, object]:
-    """Per-destination ring buffers (portal mode)."""
-    return {
-        dst: jax.tree.map(
-            lambda p: jnp.zeros((spec.depth(dst),) + tuple(p.shape),
-                                jnp.dtype(p.dtype)), proto)
-        for dst in spec.dsts
-    }
-
-
-def ring_push(ring, value):
-    """Shift one slot and insert ``value`` at slot 0 (end-of-tick)."""
-    def push(r, v):
-        if r.shape[0] == 1:
-            return v[None]
-        return jnp.concatenate([v[None].astype(r.dtype), r[:-1]], axis=0)
-    return jax.tree.map(push, ring, value)
-
-
-def ring_read(spec: SkipSpec, dst: int, ring):
-    """Value consumed at ``dst`` this tick (slot depth-1 = oldest)."""
-    return jax.tree.map(lambda r: r[spec.depth(dst) - 1], ring)
-
-
-def portal_sends(spec: SkipSpec, value, axis_name: str):
-    """PortalCopy: one direct single-pair transfer per destination.
-
-    Returns {dst: received_value}; on non-destination ranks ppermute yields
-    zeros, which the ring absorbs harmlessly (only the true dst reads it).
-    """
-    out = {}
-    for dst in spec.dsts:
-        out[dst] = jax.tree.map(
-            lambda v: jax.lax.ppermute(v, axis_name,
-                                       [(spec.src_stage, dst)]), value)
-    return out

@@ -1,5 +1,10 @@
 """Serving driver: batched prefill + pipelined decode loop.
 
+Both phases execute forward-only plans on the unified schedule runtime
+(``run_pipeline_tasks`` via ``pipeline_call``): the resident KV caches are
+plan events — read and updated only on each rank's scheduled F ticks, per
+micro-batch slot — rather than tick-loop special cases.
+
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \\
         --prompt-len 32 --gen 16 --batch 4
 """

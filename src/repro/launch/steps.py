@@ -82,17 +82,10 @@ def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
     The fused executor returns stage grads, head grads, and per-micro input
     cotangents; only the (cheap, GSPMD-land) embedding VJP remains outside
     the pipeline.  Tied-embedding models route part of the table's gradient
-    through the head loss — both contributions are summed here.
+    through the head loss — both contributions are summed here.  Skip edges
+    (enc-dec portals) and streamed inputs lower into the same plan the
+    executor runs, so every ``cfg.schedule`` covers every workload.
     """
-    if model.skips():
-        raise NotImplementedError(
-            "fused schedules do not support cross-stage skip edges yet; "
-            "use schedule='gpipe' for encoder-decoder models")
-    if pcfg.stream_inputs:
-        # don't silently drop a memory knob the gpipe path honors
-        raise NotImplementedError(
-            "stream_inputs is not supported by the fused scheduler yet; "
-            "use schedule='gpipe' or stream_inputs=False")
     consts = model.consts()
     stage_apply = model.make_stage_apply(consts)
     mbg = shape.global_batch // pcfg.n_micro
@@ -102,6 +95,8 @@ def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
 
     pipe_grad, _ = pipeline_grad_call(
         stage_apply, mesh=mesh, cfg=pcfg, loss_fn=micro_loss,
+        skips=model.skips(),
+        skip_protos=model.skip_protos(mbg, shape.seq_len),
         carry_proto=_carry_proto(model, mbg, shape.seq_len))
 
     def train_step(params, opt_state, batch):

@@ -15,7 +15,6 @@ Skip connections crossing stage boundaries follow paper §3.3:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -25,7 +24,9 @@ import numpy as np
 
 from repro.configs.base import ParallelConfig
 from repro.core import stage as stage_lib
-from repro.core.pipeline import pipeline_call
+from repro.core.pipeline import (last_stage_output, microbatch,
+                                 pipeline_call, pipeline_grad_call,
+                                 unmicrobatch)
 from repro.core.skip import SkipSpec
 
 
@@ -161,7 +162,6 @@ def build_hetero_program(model, params, mb: int, pcfg: ParallelConfig,
 def hetero_forward(program: HeteroProgram, mesh, pcfg: ParallelConfig,
                    x_batch):
     """Full pipelined forward: x [B, ...] -> y [B, ...] (last stage out)."""
-    from repro.core.pipeline import last_stage_output, microbatch, unmicrobatch
     pipe = pipeline_call(program.stage_apply, mesh=mesh, cfg=pcfg,
                          skips=program.skips,
                          skip_protos=program.skip_protos,
@@ -176,3 +176,37 @@ def hetero_forward(program: HeteroProgram, mesh, pcfg: ParallelConfig,
     out_shape = jax.ShapeDtypeStruct((B,) + tuple(program.out_proto.shape[1:]),
                                      program.out_proto.dtype)
     return stage_lib.unpack_buffer(buf, {"x": out_shape})["x"]
+
+
+def hetero_grad_call(program: HeteroProgram, mesh, pcfg: ParallelConfig):
+    """Fused schedule-driven training call for a hetero (switch) program.
+
+    The portal skip edges lower into the unified executor's plan, so the
+    U-Net / AmoebaNet pipelines train under any ``pcfg.schedule`` (GPipe or
+    1F1B) with the same bitwise-stable gradients as the LM path.  Returns
+    ``call(stacked_params, x [B, ...], y [B, ...]) -> (loss, grads)``:
+    loss is the mean-squared error of the final stage output against ``y``
+    and grads mirror ``stacked_params``.
+    """
+    max_elems = program.carry_proto["buf"].shape[1]
+    out_elems = int(np.prod(program.out_proto.shape[1:]))
+
+    def micro_loss(head_ps, carry, largs):
+        y = carry["buf"][:, :out_elems]
+        return jnp.mean((y - largs["y"]) ** 2)
+
+    pipe_grad, _ = pipeline_grad_call(
+        program.stage_apply, mesh=mesh, cfg=pcfg, loss_fn=micro_loss,
+        skips=program.skips, skip_protos=program.skip_protos,
+        carry_proto=program.carry_proto)
+
+    def call(stacked_params, x_batch, y_batch):
+        bufs = stage_lib.pack_buffer({"x": x_batch}, max_elems)
+        inputs_mb = microbatch({"buf": bufs}, pcfg.n_micro)
+        y_flat = y_batch.reshape(y_batch.shape[0], -1).astype(jnp.float32)
+        labels_mb = microbatch({"y": y_flat}, pcfg.n_micro)
+        loss, g_stage, _, _ = pipe_grad(stacked_params, {}, inputs_mb,
+                                        labels_mb)
+        return loss, g_stage
+
+    return call

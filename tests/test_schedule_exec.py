@@ -31,7 +31,11 @@ def test_plan_stash_matches_peak_stash(m, n):
     gpipe = PL.plan_for("gpipe", m, n)
     f1b = PL.plan_for("1f1b", m, n)
     assert all(gpipe.per_stage_stash[j] == m for j in range(n))
-    assert all(f1b.per_stage_stash[j] <= min(n - j, m) for j in range(n))
+    # the true per-stage depth, not the flattened SPMD max (satellite):
+    # stage j stashes exactly min(n - j, m) micro-batches under 1F1B
+    assert all(f1b.per_stage_stash[j] == min(n - j, m) for j in range(n))
+    assert (f1b.per_stage_stash_bytes(100)
+            == tuple(100 * min(n - j, m) for j in range(n)))
     # 1F1B's memory bound is the point: strictly better whenever m > n
     if m > n:
         assert f1b.stash_depth < gpipe.stash_depth
@@ -70,14 +74,21 @@ def test_plan_task_coverage(m, n):
 
 
 def test_forward_plan_is_clock_cycle():
-    """lower_forward reproduces Algorithm 1's F_{t-j, j} arithmetic."""
+    """The forward-only plan reproduces Algorithm 1's F_{t-j, j}
+    arithmetic: the same executor that runs fused F+B tables runs this
+    plan for inference / autodiff-backward execution."""
     m, n = 6, 4
-    p = PL.lower_forward(m, n)
+    p = PL.plan_for("gpipe_fwd", m, n)
+    assert not p.has_backward
     assert p.n_ticks == m + n - 1
     for t in range(p.n_ticks):
         for j in range(n):
-            assert p.valid[t, j] == (0 <= t - j < m)
-            assert p.micro[t, j] == min(max(t - j, 0), m - 1)
+            if 0 <= t - j < m:
+                assert p.kind[t, j] == PL.FWD and p.micro[t, j] == t - j
+            else:
+                assert p.kind[t, j] == PL.NOP
+    # no backward machinery in a forward-only plan
+    assert (p.stash_slot == -1).all() and (p.b_read_slot == -1).all()
 
 
 # ---------------------------------------------------------------------------
@@ -208,3 +219,168 @@ def test_1f1b_train_loop_converges():
     fixed batch on an 8-device mesh (pipeline + DP + AdamW)."""
     out = run_subprocess(TRAIN_1F1B, n_devices=8, timeout=900)
     assert "1F1B TRAIN OK" in out
+
+
+UNIFIED_EXTRAS = """
+import zlib
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat, configs
+from repro.compat import set_mesh
+from repro.configs.base import ShapeConfig, ParallelConfig
+from repro.launch import mesh as mesh_lib
+from repro.models.lm import LMModel
+from repro.core import plan as plan_lib
+from repro.core.pipeline import (pipeline_call, pipeline_grad_call,
+                                 run_pipeline_tasks, microbatch,
+                                 last_stage_output, unmicrobatch)
+
+key = jax.random.PRNGKey(0)
+
+# --- 1. skip-connection model: fused 1F1B == legacy-lowered GPipe --------
+arch = configs.smoke_arch("whisper-tiny")
+shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
+
+def whisper_lg(schedule, pipe, m, stream=False):
+    pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
+                          remat="full", schedule=schedule,
+                          stream_inputs=stream)
+    mesh = mesh_lib.make_smoke_mesh(pcfg)
+    model = LMModel(arch, pcfg, dtype=jnp.float32)
+    params = model.init(key)
+    batch = {}
+    for k, v in model.input_specs(shape).items():
+        kk = jax.random.fold_in(key, zlib.crc32(k.encode()) % 1000)
+        batch[k] = (jax.random.randint(kk, v.shape, 0, arch.vocab)
+                    if v.dtype == jnp.int32
+                    else jax.random.normal(kk, v.shape, v.dtype) * 0.1)
+    consts = model.consts()
+    mbg = shape.global_batch // m
+    cp = {"h": jax.ShapeDtypeStruct((mbg, 16, arch.d_model), jnp.float32)}
+    with set_mesh(mesh):
+        if schedule == "gpipe":       # legacy semantics: autodiff backward
+            pipe_fn = pipeline_call(
+                model.make_stage_apply(consts), mesh=mesh, cfg=pcfg,
+                skips=model.skips(),
+                skip_protos=model.skip_protos(mbg, 16), carry_proto=cp)
+            def loss_fn(p, b):
+                fresh = model.embed_inputs(p["embed"], b)
+                outs, _ = pipe_fn(p["stages"], microbatch(fresh, m), None)
+                h = unmicrobatch(last_stage_output(outs)["h"])
+                return model.head_loss(p, h, b["labels"])
+            loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params, batch)
+            return np.asarray(loss), jax.tree.map(np.asarray, grads)
+        pg, tplan = pipeline_grad_call(
+            model.make_stage_apply(consts), mesh=mesh, cfg=pcfg,
+            loss_fn=lambda hp, c, la: model.head_loss(hp, c["h"],
+                                                      la["labels"]),
+            skips=model.skips(), skip_protos=model.skip_protos(mbg, 16),
+            carry_proto=cp)
+        # portal events made it into the plan
+        assert {rt.name for rt in tplan.routes} \
+            == {s.name for s in model.skips()}
+        @jax.jit
+        def fused(p, b):
+            fresh, evjp = jax.vjp(
+                lambda e: model.embed_inputs(e, b), p["embed"])
+            head_ps = {"head": p["head"], "embed": p["embed"]}
+            loss, gs, gh, ig = pg(p["stages"], head_ps, microbatch(fresh, m),
+                                  microbatch({"labels": b["labels"]}, m))
+            (ge,) = evjp(unmicrobatch(ig))
+            ge = jax.tree.map(jnp.add, ge, gh["embed"])
+            return loss, {"embed": ge, "stages": gs, "head": gh["head"]}
+        loss, grads = fused(params, batch)
+        return np.asarray(loss), jax.tree.map(np.asarray, grads)
+
+for pipe, m in [(2, 4), (4, 4)]:
+    l_t, g_t = whisper_lg("gpipe_tasked", pipe, m)
+    l_f, g_f = whisper_lg("1f1b", pipe, m)
+    assert np.array_equal(l_t, l_f), (pipe, m, l_t, l_f)
+    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g_t)[0],
+                            jax.tree_util.tree_leaves(g_f)):
+        assert np.array_equal(a, b), (pipe, m, path)
+    l_r, g_r = whisper_lg("gpipe", pipe, m)
+    np.testing.assert_allclose(l_t, l_r, rtol=2e-5)
+    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g_r)[0],
+                            jax.tree_util.tree_leaves(g_t)):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5,
+                                   err_msg=f"{(pipe, m)} {path}")
+    print("skip-model grid point OK", pipe, m)
+
+# --- 2. streamed inputs through the fused executor: bitwise --------------
+l0, g0 = whisper_lg("1f1b", 4, 8, stream=False)
+l1, g1 = whisper_lg("1f1b", 4, 8, stream=True)
+assert np.array_equal(l0, l1), (l0, l1)
+for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g0)[0],
+                        jax.tree_util.tree_leaves(g1)):
+    assert np.array_equal(a, b), path
+print("streamed fused OK")
+
+# --- 3. resident state threaded through an F+B step ----------------------
+n, m, mb, D = 2, 4, 2, 8
+pcfg = ParallelConfig(pipe=n, tp=1, data=1, pod=1, n_micro=m,
+                      schedule="1f1b", remat="full")
+mesh = mesh_lib.make_smoke_mesh(pcfg)
+W = jax.random.normal(key, (n, D, D)) * 0.3
+x = jax.random.normal(jax.random.fold_in(key, 1), (m, mb, D))
+labels = jax.random.normal(jax.random.fold_in(key, 2), (m, mb, D))
+
+def stage_apply(p, carry, skips_in, resident, ctx):
+    h = jnp.where(ctx.stage == 0, ctx.fresh["h"], carry["h"])
+    h2 = jnp.tanh(h @ p)
+    res = dict(resident)
+    if "seen" in res:
+        res["seen"] = jax.lax.dynamic_update_index_in_dim(
+            resident["seen"], jnp.mean(h2), ctx.micro, 0)
+    return {"h": h2}, {}, res
+
+def loss_fn(hp, carry, la):
+    return jnp.mean((carry["h"] - la["y"]) ** 2)
+
+tplan = plan_lib.plan_for("1f1b", m, n)
+
+def run(with_res):
+    resident = {"seen": jnp.zeros((m,))} if with_res else {}
+    def inner(rank, res):
+        with compat.manual_region():
+            loss, gs, gh, ig, res2 = run_pipeline_tasks(
+                stage_apply, W[rank[0]], {"h": x}, pcfg, tplan=tplan,
+                head_params={}, loss_args_mb={"y": labels},
+                loss_fn=loss_fn, resident=jax.tree.map(lambda a: a[0], res),
+                rank=rank[0])
+            return (loss[None], jax.tree.map(lambda a: a[None], gs),
+                    jax.tree.map(lambda a: a[None], res2))
+    fn = compat.shard_map(inner, mesh=mesh, in_specs=(P("pipe"), P("pipe")),
+                          out_specs=(P("pipe"), P("pipe"), P("pipe")),
+                          axis_names={"pipe"}, check_vma=False)
+    rk = jnp.arange(n, dtype=jnp.int32)
+    rr = jax.tree.map(lambda a: jnp.stack([a] * n), resident)
+    return jax.jit(lambda: fn(rk, rr))()
+
+loss0, g0, _ = run(False)
+loss1, g1, res = run(True)
+# resident must not perturb the training computation ...
+assert np.array_equal(np.asarray(loss0), np.asarray(loss1))
+assert np.array_equal(np.asarray(g0), np.asarray(g1))
+# ... and must hold each stage's per-micro statistics, updated on F ticks
+h = x
+expect = []
+for j in range(n):
+    h = jnp.tanh(h @ W[j])
+    expect.append(jnp.mean(h, axis=(1, 2)))
+np.testing.assert_allclose(np.asarray(res["seen"]), np.stack(expect),
+                           rtol=1e-6)
+print("resident fused OK")
+print("UNIFIED EXTRAS OK")
+"""
+
+
+def test_unified_executor_skips_streaming_resident():
+    """The tentpole's acceptance surface: (1) a skip-connection model runs
+    the fused F+B schedules with bitwise-identical grads between the
+    legacy-lowered GPipe table and 1F1B (and matches the autodiff
+    reference); (2) ``stream_inputs`` lowers to plan injection ticks and is
+    bitwise vs replicated inputs; (3) resident state threads through an
+    F+B step without perturbing gradients."""
+    out = run_subprocess(UNIFIED_EXTRAS, n_devices=8, timeout=1800)
+    assert "UNIFIED EXTRAS OK" in out
