@@ -37,9 +37,9 @@ def main() -> None:
         return only is None or name in only
 
     if want("schedules"):
-        print("# Schedules: GPipe vs 1F1B step time + activation stash"
-              " (-> BENCH_schedules.json)")
-        grid = ((2, 4),) if args.fast else ((2, 4), (4, 8))
+        print("# Schedules: GPipe vs 1F1B vs interleaved vs zb step time"
+              " + donated activation stash (-> BENCH_schedules.json)")
+        grid = ((2, 4),) if args.fast else ((2, 4), (4, 4), (4, 8))
         _safe(lambda: schedules_bench.main(grid=grid))
     if want("ablation"):
         print("# Table 1: optimization components (U-Net, n=4, m=8)")

@@ -143,6 +143,20 @@ SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
 # Parallel / schedule config
 # ---------------------------------------------------------------------------
 
+def parse_schedule(schedule: str) -> Tuple[str, int]:
+    """Split a schedule string into (base, virtual_stages).
+
+    ``"interleaved:3"`` -> ``("interleaved", 3)`` (bare ``"interleaved"``
+    defaults to 2 chunks); every other name has one virtual stage per rank.
+    """
+    if schedule == "interleaved" or schedule.startswith("interleaved:"):
+        v = int(schedule.split(":", 1)[1]) if ":" in schedule else 2
+        if v < 1:
+            raise ValueError(f"virtual stages must be >= 1, got {v}")
+        return "interleaved", v
+    return schedule, 1
+
+
 @dataclass(frozen=True)
 class ParallelConfig:
     """How the production mesh maps onto this architecture.
@@ -158,13 +172,19 @@ class ParallelConfig:
     microbatch: int = 0           # 0 = derive from global_batch
     dp2: int = 1                  # surplus model-axis folded into extra DP
     schedule: str = "gpipe"       # execution order of the tick loop:
-    #   "gpipe"        — fill/drain forward, autodiff-induced reverse
-    #                    clock-cycle backward (paper Algorithm 1);
-    #   "gpipe_tasked" — the same task table, but executed by the fused
-    #                    scheduler (explicit-VJP backwards in the loop);
-    #   "1f1b"         — PipeDream-flush: same synchronous semantics, each
-    #                    stage drains backwards early, bounding stashed
-    #                    activations at min(n - j, m) instead of m.
+    #   "gpipe"         — fill/drain forward, autodiff-induced reverse
+    #                     clock-cycle backward (paper Algorithm 1);
+    #   "gpipe_tasked"  — the same task table, but executed by the fused
+    #                     scheduler (explicit-VJP backwards in the loop);
+    #   "1f1b"          — PipeDream-flush: same synchronous semantics, each
+    #                     stage drains backwards early, bounding stashed
+    #                     activations at min(n - j, m) instead of m;
+    #   "interleaved:v" — Megatron-style interleaved 1F1B with v virtual
+    #                     stages per rank (bubble shrinks ~1/v; needs
+    #                     n_micro % pipe == 0);
+    #   "zb"            — ZB-H1-style split backward: Bx (input cotangent)
+    #                     on the critical path, Bw (weight grad) filling
+    #                     bubble ticks.
     grad_reduce: str = "ordered"  # fused-scheduler cotangent folding:
     #   "ordered" — per-micro slots + fixed-order sum: gradients are
     #               bitwise-identical across schedules (costs m x stage-
@@ -195,6 +215,16 @@ class ParallelConfig:
     @property
     def model_axis(self) -> int:
         return self.pipe * self.tp * self.dp2
+
+    @property
+    def schedule_base(self) -> str:
+        return parse_schedule(self.schedule)[0]
+
+    @property
+    def virtual_stages(self) -> int:
+        """Chunks per rank: the model is cut into pipe * virtual_stages
+        global stages (1 for every non-interleaved schedule)."""
+        return parse_schedule(self.schedule)[1]
 
 
 # ---------------------------------------------------------------------------

@@ -10,15 +10,20 @@ placement, generalized to a 512-chip mesh.
 
 There is ONE execution engine: :func:`run_pipeline_tasks`, a scan over the
 static event plan lowered by :mod:`repro.core.plan` from a validated
-schedule task table (:mod:`repro.core.schedules`).  Each tick, rank ``j``
-runs at most one task — NOP (bubble), F, or B — selected by
-``lax.switch``; boundary activations move with a single-step
-``collective-permute`` ring shift into plan-allocated inbox slots, skip
-tensors move on plan-lowered portal/threaded routes (paper §3.3), resident
-state (KV caches) is read and updated on F ticks, and streamed inputs
-rotate towards stage 0 on plan-flagged ticks.
+schedule task table (:mod:`repro.core.schedules`).  The plan is cut into
+*segments* — maximal runs of ticks sharing a branch set — and each segment
+runs its own scan with the ``lax.switch`` pruned to exactly the branches
+that segment uses and the bookkeeping (grad writes, chain permutes, stream
+rotation) elided when the segment provably never needs it.  Each tick, rank
+``r`` runs at most one task — NOP (bubble), F, fused B, or the
+split-backward pair Bx / Bw — boundary activations move with a
+``collective-permute`` ring shift directly into plan-allocated *park* slots
+(arrival buffer == activation stash, by donation), skip tensors move on
+plan-lowered portal/threaded routes (paper §3.3), resident state (KV
+caches) is read and updated on F ticks, and streamed inputs rotate towards
+stage 0 on plan-flagged ticks.
 
-Two plan families select the backward story:
+Plan families select the backward story:
 
 * **forward-only plans** (``gpipe_fwd``, paper Algorithm 1): the executor
   runs just the forward wavefront and ``jax.grad`` through it yields the
@@ -27,13 +32,20 @@ Two plan families select the backward story:
   pairing, obtained structurally (DESIGN.md §2).  :func:`run_pipeline` /
   :func:`pipeline_call` are thin wrappers that lower this plan.
 
-* **F+B plans** (``gpipe_tasked`` / ``1f1b``): backward tasks execute
-  *inside* the same loop — a B tick pops the stashed boundary activation
-  (and parked skip operands), recomputes the stage forward inside
-  ``jax.vjp``, and ships input / skip cotangents down the reverse routes.
-  That is what lets 1F1B drain backwards early and bound the activation
-  stash at ``min(n - j, m)`` instead of ``m``; see
-  :func:`pipeline_grad_call`.
+* **F+B plans** (``gpipe_tasked`` / ``1f1b`` / ``interleaved:v`` / ``zb``):
+  backward tasks execute *inside* the same loop — a backward tick re-reads
+  the parked boundary activation (and parked skip operands), recomputes
+  the stage forward inside ``jax.vjp``, and ships input / skip cotangents
+  down the reverse routes.  That is what lets 1F1B drain backwards early
+  and bound the activation stash at ``min(n - j, m)`` instead of ``m``;
+  see :func:`pipeline_grad_call`.  With interleaved virtual stages
+  (``tplan.n_chunks > 1``) rank ``r`` holds a ``[v, ...]`` parameter block
+  and each tick dynamically selects the chunk its task touches; the ring
+  shift becomes a full rotation so chunk boundaries (rank n-1 -> rank 0)
+  ride the same collective.  Split-backward plans run Bx (input cotangent
+  only — the half other stages wait for) on the critical path and fill
+  bubble ticks with Bw (weight gradient), re-reading the parked operands
+  and the parked output cotangent.
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ParallelConfig
 from repro.core import checkpointing
 from repro.core import plan as plan_lib
+from repro.core.plan import BWD, BWD_W, BWD_X, FWD, NOP
 from repro.core.skip import SkipSpec
 
 PIPE_AXIS = "pipe"
@@ -58,12 +71,12 @@ PIPE_AXIS = "pipe"
 @dataclass
 class TickCtx:
     """Per-tick context handed to the stage function."""
-    stage: jax.Array          # axis_index('pipe') — traced
+    stage: jax.Array          # GLOBAL stage index (chunk * n_ranks + rank)
     micro: jax.Array          # micro-batch index of this rank's task
     valid: jax.Array          # bool: is this a real (scheduled) task?
     t: Any                    # tick counter (traced in scan mode, int if unrolled)
     fresh: Any                # stage-0 input pytree slice for this tick
-    n_stages: int
+    n_stages: int             # GLOBAL stage count (n_ranks * n_chunks)
     n_micro: int
 
 
@@ -77,24 +90,30 @@ def _select(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _shift_chain(value, n: int, axis: str):
-    """Main pipeline hop: rank j -> j+1 (rank 0 receives zeros)."""
+def _shift_chain(value, n: int, axis: str, *, ring: bool = False):
+    """Main pipeline hop: rank j -> j+1.  ``ring`` adds the wraparound pair
+    (n-1 -> 0) that interleaved chunk boundaries ride; without it rank 0
+    receives zeros."""
     if n == 1:
-        return jax.tree.map(jnp.zeros_like, value)
-    perm = [(i, i + 1) for i in range(n - 1)]
+        # single rank: the wraparound hop (chunk c -> c+1) is an identity
+        return value if ring else jax.tree.map(jnp.zeros_like, value)
+    perm = [(i, i + 1) for i in range(n - 1)] + ([(n - 1, 0)] if ring else [])
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
 
 
-def _shift_chain_rev(value, n: int, axis: str):
-    """Backward (cotangent) hop: rank j -> j-1 (rank n-1 receives zeros)."""
+def _shift_chain_rev(value, n: int, axis: str, *, ring: bool = False):
+    """Backward (cotangent) hop: rank j -> j-1 (+ wraparound 0 -> n-1)."""
     if n == 1:
-        return jax.tree.map(jnp.zeros_like, value)
-    perm = [(i, i - 1) for i in range(1, n)]
+        return value if ring else jax.tree.map(jnp.zeros_like, value)
+    perm = [(i, i - 1) for i in range(1, n)] + ([(0, n - 1)] if ring else [])
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
 
 
 def _route_hop(value, perm, axis: str):
-    """One skip-route hop: a static (src, dst) pair list ppermute."""
+    """One skip-route hop: a static (src, dst) pair list ppermute.  An empty
+    perm means src and dst share a rank — the hop is an identity hold."""
+    if not perm:
+        return value
     return jax.tree.map(
         lambda v: jax.lax.ppermute(v, axis, list(perm)), value)
 
@@ -176,6 +195,18 @@ def _masked_write(buf_tree, val_tree, slot, pred):
     return jax.tree.map(upd, buf_tree, val_tree)
 
 
+def _masked_accum(buf_tree, val_tree, slot, pred):
+    """Add ``val`` into row ``slot`` under ``pred`` (chunked grad rows:
+    each chunk's backward deposits into its own disjoint sub-row)."""
+    s = jnp.maximum(slot, 0)
+
+    def upd(b, v):
+        cur = jax.lax.dynamic_index_in_dim(b, s, 0, keepdims=False)
+        new = jnp.where(pred, cur + v.astype(b.dtype), cur)
+        return jax.lax.dynamic_update_index_in_dim(b, new, s, 0)
+    return jax.tree.map(upd, buf_tree, val_tree)
+
+
 def _zeros_of(proto):
     return jax.tree.map(
         lambda p: jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype)), proto)
@@ -211,42 +242,43 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     ``(outputs, resident)``: outputs is the ``[m, ...carry]`` collection at
     the last rank (autodiff through this call induces the reverse
     clock-cycle).  F+B plans return ``(loss_sum, stage_grads, head_grads,
-    input_grads_mb, resident)``: a B tick pops the stashed boundary
-    activation and parked skip operands, recomputes the stage forward
+    input_grads_mb, resident)``: a backward tick re-reads the parked
+    boundary activation and skip operands, recomputes the stage forward
     inside ``jax.vjp`` (the paper's Checkpoint/Recompute pairing, now
-    structural), and ships carry / skip cotangents down the reverse routes.
+    structural), and ships carry / skip cotangents down the reverse
+    routes.  Fused B ticks produce input and weight cotangents together;
+    split plans run Bx (inputs only) on the critical path and Bw (weights
+    only) in former bubble ticks, re-seeding the weight VJP from the
+    still-parked output cotangent.
 
-    Skip edges execute as plan-lowered routes: the destination parks the
-    portal value until its consuming forward and — under F+B — keeps it
-    parked for the consumer's backward recompute; skip cotangents travel
-    the mirrored reverse route and seed the producer's backward, summing
-    over destinations in fixed route order.  Resident state (KV caches) is
-    read/updated only on F ticks; a B recompute sees resident as a
-    non-differentiated constant, so gradient-relevant stage outputs must
-    not depend on resident slots mutated between F and B (per-micro caches
-    and fold-in statistics satisfy this by construction).
+    With interleaved plans (``tplan.n_chunks > 1``), ``stage_params``
+    leaves carry a leading ``[n_chunks]`` axis — rank ``r`` holds global
+    stages ``{r, r + R, ...}`` — and each task dynamically selects its
+    chunk; returned ``stage_grads`` mirror the ``[n_chunks, ...]`` block.
 
-    With ``cfg.stream_inputs`` the ``inputs_mb`` argument is this rank's
-    ``[m // n, ...]`` shard of the micro-batches; the plan flags the ticks
-    after which the stream ring rotates one hop towards stage 0, and under
-    F+B the consumed slices are stashed alongside the activations so the
-    backward recompute replays the exact injected input.
+    The plan's segments drive one scan each: a GPipe fill runs a pure-F
+    loop with no gradient bookkeeping at all, the 1F1B steady state runs
+    the mixed F/B loop, and a ZB drain runs Bw-only ticks — the
+    ``lax.switch`` in each segment contains exactly the branches that
+    segment uses.
 
-    Losses accumulate in ascending micro order on the last rank (identical
-    in every schedule) and parameter cotangents are collected per-micro and
-    reduced in a fixed order (``cfg.grad_reduce == "ordered"``), so any two
-    schedules of the same computation produce bitwise-identical losses and
-    gradients.  ``grad_reduce == "running"`` instead folds cotangents in
-    schedule order — O(1) extra memory, but bit-exact only against itself.
+    Losses accumulate in ascending micro order on the last stage
+    (identical in every schedule) and parameter cotangents are collected
+    per-micro and reduced in a fixed order (``cfg.grad_reduce ==
+    "ordered"``), so any two schedules of the same computation produce
+    bitwise-identical losses and gradients.  ``grad_reduce == "running"``
+    instead folds cotangents in schedule order — O(1) extra memory, but
+    bit-exact only against itself.
     """
-    n, m = cfg.pipe, cfg.n_micro
-    assert tplan.n_stages == n and tplan.n_micro == m
-    T = tplan.n_ticks
+    R, m = cfg.pipe, cfg.n_micro
+    assert tplan.n_ranks == R and tplan.n_micro == m
+    v = tplan.n_chunks
+    chunked = v > 1
     fb = tplan.has_backward
     if rank is not None:
         idx = rank
     else:
-        idx = jax.lax.axis_index(axis) if n > 1 else jnp.zeros((), jnp.int32)
+        idx = jax.lax.axis_index(axis) if R > 1 else jnp.zeros((), jnp.int32)
     skip_protos = skip_protos or {}
     resident = {} if resident is None else resident
     routes = tplan.routes
@@ -254,8 +286,8 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     for name in skip_names:
         if name not in skip_protos:
             raise ValueError(f"skip edge {name!r} has no proto")
-    streaming = cfg.stream_inputs and n > 1
-    k_stream = m // n if streaming else 0
+    streaming = cfg.stream_inputs and R > 1
+    k_stream = m // R if streaming else 0
 
     if fb:
         if loss_fn is None:
@@ -273,12 +305,19 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         carry0 = _zeros_of(carry_proto)
     fresh0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype),
                           inputs_mb)
-    is_last = idx == n - 1
+    is_last_rank = idx == R - 1
 
-    # ---- scan state -------------------------------------------------------
+    def chunk_params(p_all, c):
+        if not chunked:
+            return p_all
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, keepdims=False),
+            p_all)
+
+    # ---- scan state (identical pytree across all segment scans) -----------
     st = {
         "f_chain": _zeros_of(carry0),
-        "f_inbox": _buf(tplan.f_inbox_depth, carry0),
+        "park": _buf(max(tplan.park_depth, 1), carry0),
         "resident": resident,
         "routes": {rt.key: {"buf": _buf(rt.depth, skip_protos[rt.name]),
                             "fly": _zeros_of(skip_protos[rt.name])}
@@ -289,7 +328,6 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     if fb:
         st["b_chain"] = _zeros_of(carry0)
         st["b_inbox"] = _buf(tplan.b_inbox_depth, carry0)
-        st["stash"] = _buf(max(tplan.stash_depth, 1), carry0)
         st["loss"] = jnp.zeros((), jnp.float32)
         st["g_stage"] = (_buf(m, stage_params) if ordered
                          else jax.tree.map(jnp.zeros_like, stage_params))
@@ -297,7 +335,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                         else jax.tree.map(jnp.zeros_like, head_params))
         st["igbuf"] = _buf(m, fresh0)
         if streaming:
-            st["fstash"] = _buf(max(tplan.stash_depth, 1), fresh0)
+            st["fs"] = _buf(tplan.fs_depth, fresh0)
         for rt in routes:
             st["routes"][rt.key]["gbuf"] = _buf(rt.g_depth,
                                                 skip_protos[rt.name])
@@ -309,26 +347,6 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         inputs_mb = _constrain_batch0(inputs_mb, lead=1)
         if streaming:
             st["stream"] = inputs_mb
-
-    # ---- per-tick plan rows ----------------------------------------------
-    xs = {
-        "t": jnp.arange(T),
-        "kind": jnp.asarray(tplan.kind),
-        "micro": jnp.asarray(tplan.micro),
-        "ss": jnp.asarray(tplan.stash_slot),
-        "frs": jnp.asarray(tplan.f_recv_slot),
-        "frd": jnp.asarray(tplan.f_read_slot),
-        "brs": jnp.asarray(tplan.b_recv_slot),
-        "brd": jnp.asarray(tplan.b_read_slot),
-        "rot": jnp.asarray(tplan.stream_rot),
-        "routes": {rt.key: {"send": jnp.asarray(rt.send),
-                            "recv": jnp.asarray(rt.recv),
-                            "read": jnp.asarray(rt.read),
-                            "g_send": jnp.asarray(rt.g_send),
-                            "g_recv": jnp.asarray(rt.g_recv),
-                            "g_read": jnp.asarray(rt.g_read)}
-                   for rt in routes},
-    }
 
     def normalize_skips(skips_out):
         """Stage skips_out -> exactly the declared names (protos' dtypes)."""
@@ -345,207 +363,374 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     def zeros_skips():
         return {name: _zeros_of(skip_protos[name]) for name in skip_names}
 
-    def tick_body(st, xt):
-        t = xt["t"]
-        kind = xt["kind"][idx]
-        micro = xt["micro"][idx]
-        ss = xt["ss"][idx]
-        frs, frd = xt["frs"][idx], xt["frd"][idx]
+    # ---- per-segment scan bodies -----------------------------------------
+    def make_segment(seg: plan_lib.Segment):
+        sl = slice(seg.start, seg.stop)
+        kinds = seg.kinds
+        has_f = FWD in kinds
+        has_bi = any(k in kinds for k in plan_lib.BWD_INPUT_KINDS)
+        has_bw = any(k in kinds for k in plan_lib.BWD_WEIGHT_KINDS)
+        has_b = any(k in kinds for k in plan_lib.BWD_KINDS)
+        need_park = bool((tplan.park_recv[sl] >= 0).any())
+        need_bseed = fb and bool((tplan.b_read[sl] >= 0).any())
+        need_brecv = fb and bool((tplan.b_recv[sl] >= 0).any())
+        need_rot = streaming and bool(tplan.stream_rot[sl].any())
+        need_x = bool((tplan.park_read[sl] >= 0).any())
 
-        # 1. park ring / route arrivals in their plan-assigned slots
-        f_inbox = _masked_write(st["f_inbox"], st["f_chain"], frs, frs >= 0)
-        rst = {}
-        for rt in routes:
-            rx = xt["routes"][rt.key]
-            rs = st["routes"][rt.key]
-            rc = rx["recv"][idx]
-            entry = {"buf": _masked_write(rs["buf"], rs["fly"], rc, rc >= 0)}
-            if fb:
-                grc = rx["g_recv"][idx]
-                entry["gbuf"] = _masked_write(rs["gbuf"], rs["gfly"], grc,
-                                              grc >= 0)
-            rst[rt.key] = entry
-        if fb:
-            brs, brd = xt["brs"][idx], xt["brd"][idx]
-            b_inbox = _masked_write(st["b_inbox"], st["b_chain"], brs,
-                                    brs >= 0)
+        # branch-index remap: plan kind id -> position in this segment's set
+        remap = {k: i for i, k in enumerate(kinds)}
+        sel = tplan.kind[sl].copy()
+        for k, i in remap.items():
+            sel[tplan.kind[sl] == k] = i
 
-        # 2. gather this tick's operands
-        x_f = _select(frd >= 0, _dyn_read(f_inbox, frd), _zeros_of(carry0))
-        if not fb:
-            x_f = _constrain_batch0(x_f)
-        skips_in = zeros_skips()
-        for rt in routes:
-            rd = xt["routes"][rt.key]["read"][idx]
-            skips_in[rt.name] = _select(
-                rd >= 0, _dyn_read(rst[rt.key]["buf"], rd),
-                skips_in[rt.name])
+        xs = {
+            "t": jnp.arange(seg.start, seg.stop),
+            "sel": jnp.asarray(sel),
+            "micro": jnp.asarray(tplan.micro[sl]),
+            "chunk": jnp.asarray(tplan.chunk[sl]),
+            "prd": jnp.asarray(tplan.park_read[sl]),
+        }
+        if need_park:
+            xs["prs"] = jnp.asarray(tplan.park_recv[sl])
+        if need_bseed:
+            xs["brd"] = jnp.asarray(tplan.b_read[sl])
+        if need_brecv:
+            xs["brs"] = jnp.asarray(tplan.b_recv[sl])
         if streaming:
-            # stage 0's task micro sits in slot micro//n after the plan's
-            # rotations; other ranks read (and mask out) a sibling slice.
-            slot = jnp.clip(xt["micro"][0] // n, 0, max(k_stream - 1, 0))
-            fresh_f = _dyn_read(st["stream"], slot)
-        else:
-            fresh_f = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, micro, 0, keepdims=False), inputs_mb)
-            if not fb:
-                fresh_f = _constrain_batch0(fresh_f)
-        resident = st["resident"]
+            xs["ssl"] = jnp.asarray(tplan.stream_slot[sl])
+            xs["rot"] = jnp.asarray(tplan.stream_rot[sl])
+            if fb:
+                xs["fsl"] = jnp.asarray(tplan.fs_slot[sl])
+        rxs = {}
+        for rt in routes:
+            e = {}
+            for nm, arr in (("send", rt.send), ("recv", rt.recv),
+                            ("read", rt.read)):
+                if (arr[sl] >= 0).any() or (nm == "send"
+                                            and (arr[sl] != -1).any()):
+                    e[nm] = jnp.asarray(arr[sl])
+            if fb:
+                for nm, arr in (("g_send", rt.g_send), ("g_recv", rt.g_recv),
+                                ("g_read", rt.g_read)):
+                    if (arr[sl] >= 0).any() or (nm == "g_send"
+                                                and (arr[sl] != -1).any()):
+                        e[nm] = jnp.asarray(arr[sl])
+            rxs[rt.key] = e
+        if rxs and any(rxs.values()):
+            xs["routes"] = rxs
 
-        if fb:
-            stash_v = _dyn_read(st["stash"], ss)
-            bseed = _select(brd >= 0, _dyn_read(b_inbox, brd),
-                            _zeros_of(carry0))
-            fresh_b = (_dyn_read(st["fstash"], ss) if streaming else fresh_f)
-            largs = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(
-                    a, micro, 0, keepdims=False), loss_args_mb)
-            skip_seeds = zeros_skips()
+        def tick_body(st, xt):
+            t = xt["t"]
+            sel_t = xt["sel"][idx]
+            micro_t = xt["micro"][idx]
+            chunk_t = xt["chunk"][idx]
+            prd = xt["prd"][idx]
+            is_last_stage = (is_last_rank & (chunk_t == v - 1) if chunked
+                             else is_last_rank)
+
+            # 1. park ring / route arrivals in their plan-assigned slots
+            park = st["park"]
+            if need_park:
+                prs = xt["prs"][idx]
+                park = _masked_write(park, st["f_chain"], prs, prs >= 0)
+            rst = {}
             for rt in routes:
-                gr = xt["routes"][rt.key]["g_read"][idx]
-                add = _select(gr >= 0, _dyn_read(rst[rt.key]["gbuf"], gr),
-                              _zeros_of(skip_protos[rt.name]))
-                skip_seeds[rt.name] = jax.tree.map(
-                    jnp.add, skip_seeds[rt.name], add)
+                rx = xt.get("routes", {}).get(rt.key, {})
+                rs = st["routes"][rt.key]
+                entry = {"buf": rs["buf"]}
+                if "recv" in rx:
+                    rc = rx["recv"][idx]
+                    entry["buf"] = _masked_write(rs["buf"], rs["fly"], rc,
+                                                 rc >= 0)
+                if fb:
+                    entry["gbuf"] = rs["gbuf"]
+                    if "g_recv" in rx:
+                        grc = rx["g_recv"][idx]
+                        entry["gbuf"] = _masked_write(rs["gbuf"], rs["gfly"],
+                                                      grc, grc >= 0)
+                rst[rt.key] = entry
+            b_inbox = st.get("b_inbox")
+            if need_brecv:
+                brs = xt["brs"][idx]
+                b_inbox = _masked_write(b_inbox, st["b_chain"], brs, brs >= 0)
 
-        # 3. run exactly one task (XLA conditional: no masked double work)
-        if fb:
-            def apply_stage(p, c, si, fr, ph):
-                ctx = TickCtx(stage=idx, micro=micro,
-                              valid=jnp.asarray(True), t=t, fresh=fr,
-                              n_stages=n, n_micro=m)
-                carry_out, skips_out, res_new = stage_apply(p, c, si,
-                                                            resident, ctx)
-                if not cfg.overlap:
-                    (carry_out,), = (_barrier(carry_out),)
-                loss_i = jax.lax.cond(
-                    is_last,
-                    lambda: loss_fn(ph, carry_out, largs).astype(jnp.float32),
-                    lambda: jnp.zeros((), jnp.float32))
-                return carry_out, normalize_skips(skips_out), loss_i, res_new
-
-            def nop_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
-                           res):
-                return (_zeros_of(carry0), _zeros_of(carry0), zeros_skips(),
-                        zeros_skips(), jax.tree.map(jnp.zeros_like,
-                                                    stage_params),
-                        jax.tree.map(jnp.zeros_like, head_params),
-                        _zeros_of(fresh0), jnp.zeros((), jnp.float32), res)
-
-            def f_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
-                         res):
-                carry_out, skip_vals, loss_i, res_new = apply_stage(
-                    stage_params, x_f, skips_v, fr_f, head_params)
-                return (carry_out, _zeros_of(carry0), skip_vals,
-                        zeros_skips(), jax.tree.map(jnp.zeros_like,
-                                                    stage_params),
-                        jax.tree.map(jnp.zeros_like, head_params),
-                        _zeros_of(fresh0), loss_i, res_new)
-
-            def b_branch(x_f, stash_v, skips_v, fr_f, fr_b, bseed, seeds,
-                         res):
-                def f(p, c, si, fr, ph):
-                    carry_out, skip_vals, loss_i, _ = apply_stage(
-                        p, c, si, fr, ph)
-                    return carry_out, skip_vals, loss_i
-                # jax.vjp recomputes the stage forward from the stashed
-                # boundary input + parked skip operands and applies the
-                # cotangents immediately — remat-before-backward with no
-                # residuals carried across ticks.
-                _, vjp = jax.vjp(f, stage_params, stash_v, skips_v, fr_b,
-                                 head_params)
-                loss_bar = jnp.where(is_last, seed, 0.0).astype(jnp.float32)
-                g_p, g_c, g_si, g_fr, g_ph = vjp((bseed, seeds, loss_bar))
-                return (_zeros_of(carry0), g_c, zeros_skips(), g_si, g_p,
-                        g_ph, g_fr, jnp.zeros((), jnp.float32), res)
-
-            (carry_send, b_send, skip_vals, skip_gvals, g_p, g_ph, g_fr,
-             loss_i, res_new) = jax.lax.switch(
-                kind, (nop_branch, f_branch, b_branch),
-                x_f, stash_v, skips_in, fresh_f, fresh_b, bseed,
-                skip_seeds, resident)
-        else:
-            ctx = TickCtx(stage=idx, micro=micro, valid=kind == plan_lib.FWD,
-                          t=t, fresh=fresh_f, n_stages=n, n_micro=m)
-            wrapped = checkpointing.wrap_stage(
-                lambda p, c, si, r: stage_apply(p, c, si, r, ctx), cfg.remat)
-
-            def nop_branch(x_f, skips_v, res):
-                return _zeros_of(carry0), zeros_skips(), res
-
-            def f_branch(x_f, skips_v, res):
-                carry_out, skips_out, res_new = wrapped(stage_params, x_f,
-                                                        skips_v, res)
-                if not cfg.overlap:
-                    (carry_out,), = (_barrier(carry_out),)
-                return (_constrain_batch0(carry_out),
-                        normalize_skips(skips_out), res_new)
-
-            carry_send, skip_vals, res_new = jax.lax.switch(
-                kind, (nop_branch, f_branch), x_f, skips_in, resident)
-
-        # 4. commit state
-        out = {"resident": res_new, "routes": {}}
-        is_f = kind == plan_lib.FWD
-        if fb:
-            is_b = kind == plan_lib.BWD
-            out["loss"] = st["loss"] + loss_i
-            out["stash"] = _masked_write(st["stash"], x_f, ss,
-                                         is_f & (ss >= 0))
-            if streaming:
-                out["fstash"] = _masked_write(st["fstash"], fresh_f, ss,
-                                              is_f & (ss >= 0))
-            if ordered:
-                out["g_stage"] = _masked_write(st["g_stage"], g_p, micro,
-                                               is_b)
-                out["g_head"] = _masked_write(st["g_head"], g_ph, micro,
-                                              is_b & is_last)
+            # 2. gather this tick's operands
+            if need_x:
+                x_f = _select(prd >= 0, _dyn_read(park, prd),
+                              _zeros_of(carry0))
             else:
-                out["g_stage"] = jax.tree.map(jnp.add, st["g_stage"], g_p)
-                out["g_head"] = jax.tree.map(jnp.add, st["g_head"], g_ph)
-            out["igbuf"] = _masked_write(st["igbuf"], g_fr, micro,
-                                         is_b & (idx == 0))
-            out["b_inbox"] = b_inbox
-            out["b_chain"] = _shift_chain_rev(b_send, n, axis)
-        else:
-            out["outputs"] = _constrain_batch0(
-                _masked_write(st["outputs"], carry_send, micro,
-                              is_f & is_last), lead=1)
-        out["f_inbox"] = f_inbox
-        out["f_chain"] = _shift_chain(carry_send, n, axis)
+                x_f = _zeros_of(carry0)
+            if not fb:
+                x_f = _constrain_batch0(x_f)
+            skips_in = zeros_skips()
+            for rt in routes:
+                rx = xt.get("routes", {}).get(rt.key, {})
+                if "read" in rx:
+                    rd = rx["read"][idx]
+                    skips_in[rt.name] = _select(
+                        rd >= 0, _dyn_read(rst[rt.key]["buf"], rd),
+                        skips_in[rt.name])
+            if streaming:
+                ssl = jnp.clip(xt["ssl"], 0, max(k_stream - 1, 0))
+                fresh_f = _dyn_read(st["stream"], ssl)
+            else:
+                fresh_f = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, micro_t, 0, keepdims=False), inputs_mb)
+                if not fb:
+                    fresh_f = _constrain_batch0(fresh_f)
+            resident = st["resident"]
 
-        # 5. skip-route hops (static single-pair / chain permutes)
-        for rt in routes:
-            rx = xt["routes"][rt.key]
-            entry = rst[rt.key]
-            sv = rx["send"][idx]
-            val = _select(sv == plan_lib.SEND_STAGE, skip_vals[rt.name],
-                          _dyn_read(entry["buf"], sv))
-            entry["fly"] = _route_hop(val, rt.fwd_perm, axis)
             if fb:
-                gv = rx["g_send"][idx]
-                gval = _select(gv == plan_lib.SEND_STAGE,
-                               skip_gvals[rt.name],
-                               _dyn_read(entry["gbuf"], gv))
-                entry["gfly"] = _route_hop(gval, rt.bwd_perm, axis)
-            out["routes"][rt.key] = entry
+                if need_bseed:
+                    brd = xt["brd"][idx]
+                    bseed = _select(brd >= 0, _dyn_read(b_inbox, brd),
+                                    _zeros_of(carry0))
+                else:
+                    bseed = _zeros_of(carry0)
+                if streaming and has_b:
+                    fsl = xt["fsl"][idx]
+                    fresh_b = _dyn_read(st["fs"], fsl)
+                else:
+                    fresh_b = fresh_f
+                largs = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, micro_t, 0, keepdims=False), loss_args_mb)
+                skip_seeds = zeros_skips()
+                for rt in routes:
+                    rx = xt.get("routes", {}).get(rt.key, {})
+                    if "g_read" in rx:
+                        gr = rx["g_read"][idx]
+                        add = _select(gr >= 0,
+                                      _dyn_read(rst[rt.key]["gbuf"], gr),
+                                      _zeros_of(skip_protos[rt.name]))
+                        skip_seeds[rt.name] = jax.tree.map(
+                            jnp.add, skip_seeds[rt.name], add)
 
-        # 6. rotate the input stream one rank towards stage 0 on the
-        #    plan-flagged ticks (keeps rotation count == injected micros)
-        if streaming:
-            rot = [(i, (i - 1) % n) for i in range(n)]
-            spun = jax.tree.map(
-                lambda a: jax.lax.ppermute(a, axis, rot), st["stream"])
-            out["stream"] = _select(xt["rot"], spun, st["stream"])
-        return out, None
+            # 3. run exactly one task (XLA conditional: no masked work)
+            if fb:
+                def apply_full(p_all, c, si, fr, ph):
+                    p = chunk_params(p_all, chunk_t)
+                    gstage = chunk_t * R + idx if chunked else idx
+                    ctx = TickCtx(stage=gstage, micro=micro_t,
+                                  valid=jnp.asarray(True), t=t, fresh=fr,
+                                  n_stages=tplan.n_stages, n_micro=m)
+                    carry_out, skips_out, res_new = stage_apply(p, c, si,
+                                                                resident, ctx)
+                    if not cfg.overlap:
+                        (carry_out,), = (_barrier(carry_out),)
+                    loss_i = jax.lax.cond(
+                        is_last_stage,
+                        lambda: loss_fn(ph, carry_out,
+                                        largs).astype(jnp.float32),
+                        lambda: jnp.zeros((), jnp.float32))
+                    return carry_out, normalize_skips(skips_out), loss_i, \
+                        res_new
 
-    if cfg.unroll_ticks:
-        state = st
-        for t in range(T):
-            state, _ = tick_body(state, jax.tree.map(lambda a: a[t], xs))
-    else:
-        state, _ = jax.lax.scan(tick_body, st, xs)
+                def out_zeros():
+                    o = {"res": resident}
+                    if has_f:
+                        o["carry"] = _zeros_of(carry0)
+                        o["skips"] = zeros_skips()
+                        o["loss"] = jnp.zeros((), jnp.float32)
+                    if has_bi:
+                        o["b"] = _zeros_of(carry0)
+                        o["gskips"] = zeros_skips()
+                        o["g_fr"] = _zeros_of(fresh0)
+                    if has_bw:
+                        o["g_p"] = jax.tree.map(jnp.zeros_like, stage_params)
+                        o["g_ph"] = jax.tree.map(jnp.zeros_like, head_params)
+                    return o
+
+                def seeds_tuple():
+                    loss_bar = jnp.where(is_last_stage, seed,
+                                         0.0).astype(jnp.float32)
+                    return bseed, skip_seeds, loss_bar
+
+                def nop_branch():
+                    return out_zeros()
+
+                def f_branch():
+                    carry_out, skip_vals, loss_i, res_new = apply_full(
+                        stage_params, x_f, skips_in, fresh_f, head_params)
+                    o = out_zeros()
+                    o.update(carry=carry_out, skips=skip_vals, loss=loss_i,
+                             res=res_new)
+                    return o
+
+                def b_branch():
+                    def f(p, c, si, fr, ph):
+                        carry_out, skip_vals, loss_i, _ = apply_full(
+                            p, c, si, fr, ph)
+                        return carry_out, skip_vals, loss_i
+                    # jax.vjp recomputes the stage forward from the parked
+                    # boundary input + parked skip operands and applies the
+                    # cotangents immediately — remat-before-backward with no
+                    # residuals carried across ticks.
+                    _, vjp = jax.vjp(f, stage_params, x_f, skips_in, fresh_b,
+                                     head_params)
+                    g_p, g_c, g_si, g_fr, g_ph = vjp(seeds_tuple())
+                    o = out_zeros()
+                    o.update(b=g_c, gskips=g_si, g_fr=g_fr, g_p=g_p,
+                             g_ph=g_ph)
+                    return o
+
+                def bx_branch():
+                    def f(c, si, fr):
+                        carry_out, skip_vals, loss_i, _ = apply_full(
+                            stage_params, c, si, fr, head_params)
+                        return carry_out, skip_vals, loss_i
+                    # input-cotangent half only: weight-gradient chains are
+                    # dead code here and XLA eliminates them.
+                    _, vjp = jax.vjp(f, x_f, skips_in, fresh_b)
+                    g_c, g_si, g_fr = vjp(seeds_tuple())
+                    o = out_zeros()
+                    o.update(b=g_c, gskips=g_si, g_fr=g_fr)
+                    return o
+
+                def bw_branch():
+                    def f(p, ph):
+                        carry_out, skip_vals, loss_i, _ = apply_full(
+                            p, x_f, skips_in, fresh_b, ph)
+                        return carry_out, skip_vals, loss_i
+                    # weight-gradient half, re-seeded from the parked output
+                    # cotangent; input chains are dead code.
+                    _, vjp = jax.vjp(f, stage_params, head_params)
+                    g_p, g_ph = vjp(seeds_tuple())
+                    o = out_zeros()
+                    o.update(g_p=g_p, g_ph=g_ph)
+                    return o
+
+                branch_of = {NOP: nop_branch, FWD: f_branch, BWD: b_branch,
+                             BWD_X: bx_branch, BWD_W: bw_branch}
+                branches = tuple(branch_of[k] for k in kinds)
+                res = (branches[0]() if len(branches) == 1
+                       else jax.lax.switch(sel_t, branches))
+            else:
+                ctx = TickCtx(stage=idx, micro=micro_t, valid=sel_t
+                              == remap.get(FWD, -1), t=t, fresh=fresh_f,
+                              n_stages=tplan.n_stages, n_micro=m)
+                wrapped = checkpointing.wrap_stage(
+                    lambda p, c, si, r: stage_apply(p, c, si, r, ctx),
+                    cfg.remat)
+
+                def nop_branch():
+                    return {"carry": _zeros_of(carry0),
+                            "skips": zeros_skips(), "res": resident}
+
+                def f_branch():
+                    carry_out, skips_out, res_new = wrapped(
+                        stage_params, x_f, skips_in, resident)
+                    if not cfg.overlap:
+                        (carry_out,), = (_barrier(carry_out),)
+                    return {"carry": _constrain_batch0(carry_out),
+                            "skips": normalize_skips(skips_out),
+                            "res": res_new}
+
+                branch_of = {NOP: nop_branch, FWD: f_branch}
+                branches = tuple(branch_of[k] for k in kinds)
+                res = (branches[0]() if len(branches) == 1
+                       else jax.lax.switch(sel_t, branches))
+
+            # 4. commit state
+            out = dict(st)
+            out["park"] = park
+            out["resident"] = res["res"]
+            is_f = sel_t == remap.get(FWD, -1) if has_f else None
+            if fb:
+                if has_f:
+                    out["loss"] = st["loss"] + res["loss"]
+                    if streaming:
+                        fsl = xt["fsl"][idx]
+                        out["fs"] = _masked_write(st["fs"], fresh_f, fsl,
+                                                  is_f & (fsl >= 0))
+                if has_bw:
+                    w_sels = [remap[k] for k in plan_lib.BWD_WEIGHT_KINDS
+                              if k in remap]
+                    is_w = functools.reduce(
+                        jnp.logical_or, [sel_t == s for s in w_sels])
+                    if ordered:
+                        wr = _masked_accum if chunked else _masked_write
+                        out["g_stage"] = wr(st["g_stage"], res["g_p"],
+                                            micro_t, is_w)
+                        head_pred = is_w & is_last_stage
+                        out["g_head"] = _masked_write(st["g_head"],
+                                                      res["g_ph"], micro_t,
+                                                      head_pred)
+                    else:
+                        out["g_stage"] = jax.tree.map(jnp.add, st["g_stage"],
+                                                      res["g_p"])
+                        out["g_head"] = jax.tree.map(jnp.add, st["g_head"],
+                                                     res["g_ph"])
+                if has_bi:
+                    bi_sels = [remap[k] for k in plan_lib.BWD_INPUT_KINDS
+                               if k in remap]
+                    is_bi = functools.reduce(
+                        jnp.logical_or, [sel_t == s for s in bi_sels])
+                    ig_pred = is_bi & (idx == 0)
+                    if chunked:
+                        ig_pred = ig_pred & (chunk_t == 0)
+                    out["igbuf"] = _masked_write(st["igbuf"], res["g_fr"],
+                                                 micro_t, ig_pred)
+                    out["b_inbox"] = b_inbox
+                    out["b_chain"] = _shift_chain_rev(res["b"], R, axis,
+                                                      ring=chunked)
+                elif need_brecv:
+                    out["b_inbox"] = b_inbox
+            else:
+                if has_f:
+                    out["outputs"] = _constrain_batch0(
+                        _masked_write(st["outputs"], res["carry"], micro_t,
+                                      is_f & is_last_rank), lead=1)
+            if has_f:
+                out["f_chain"] = _shift_chain(res["carry"], R, axis,
+                                              ring=chunked)
+
+            # 5. skip-route hops (static single-pair / chain permutes)
+            if routes:
+                out["routes"] = {}
+            for rt in routes:
+                rx = xt.get("routes", {}).get(rt.key, {})
+                entry = rst[rt.key]
+                if "send" in rx and has_f:
+                    sv = rx["send"][idx]
+                    val = _select(sv == plan_lib.SEND_STAGE,
+                                  res["skips"][rt.name],
+                                  _dyn_read(entry["buf"], sv))
+                    entry["fly"] = _route_hop(val, rt.fwd_perm, axis)
+                else:
+                    entry["fly"] = st["routes"][rt.key]["fly"]
+                if fb:
+                    if "g_send" in rx and has_bi:
+                        gv = rx["g_send"][idx]
+                        gval = _select(gv == plan_lib.SEND_STAGE,
+                                       res["gskips"][rt.name],
+                                       _dyn_read(entry["gbuf"], gv))
+                        entry["gfly"] = _route_hop(gval, rt.bwd_perm, axis)
+                    else:
+                        entry["gfly"] = st["routes"][rt.key]["gfly"]
+                out["routes"][rt.key] = entry
+
+            # 6. rotate the input stream one rank towards stage 0 on the
+            #    plan-flagged ticks (keeps rotation count == injected micros)
+            if need_rot:
+                rot = [(i, (i - 1) % R) for i in range(R)]
+                spun = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, axis, rot), st["stream"])
+                out["stream"] = _select(xt["rot"], spun, st["stream"])
+            return out, None
+
+        return xs, tick_body
+
+    state = st
+    for seg in tplan.segments:
+        xs, body = make_segment(seg)
+        if cfg.unroll_ticks:
+            for t in range(seg.stop - seg.start):
+                state, _ = body(state, jax.tree.map(lambda a, _t=t: a[_t],
+                                                    xs))
+        else:
+            state, _ = jax.lax.scan(body, state, xs)
 
     if not fb:
         return state["outputs"], state["resident"]
@@ -610,21 +795,25 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
     * ``loss`` is the mean per-micro loss (matches ``head_loss`` over the
       full batch up to micro-chunked summation order),
     * ``stage_grads`` mirrors ``stage_params`` ([n_stages, ...], sharded
-      over ``pipe``),
+      over ``pipe``; for interleaved schedules ``n_stages = pipe * v``
+      global stages stacked in stage order),
     * ``head_grads`` mirrors ``head_params`` (valid on the last rank),
     * ``input_grads_mb`` mirrors ``inputs_mb`` ([m, ...], valid on rank 0)
       — feed it to the embed VJP outside the pipeline.  Skip cotangents a
       stage-0 producer routes into its fresh input (e.g. the enc-dec
       ``dec_in`` portal) are folded in here as well.
 
-    The schedule comes from ``cfg.schedule``: ``"1f1b"`` or
-    ``"gpipe"``/``"gpipe_tasked"`` — both lowered by
-    :func:`repro.core.plan.plan_for` from the validated task tables in
-    :mod:`repro.core.schedules`.  Skip edges lower to portal/threaded
-    routes per ``cfg.portals``; ``cfg.stream_inputs`` (with ``m % n == 0``)
-    shards the micro-batches over pipe and injects them on plan ticks.
+    The schedule comes from ``cfg.schedule``: ``"1f1b"``,
+    ``"gpipe"``/``"gpipe_tasked"``, ``"interleaved:v"`` (v virtual stages
+    per rank, Megatron-style) or ``"zb"`` (ZB-H1 split backward) — all
+    lowered by :func:`repro.core.plan.plan_for` from the validated task
+    tables in :mod:`repro.core.schedules`.  Skip edges lower to
+    portal/threaded routes per ``cfg.portals``; ``cfg.stream_inputs``
+    (with ``m % n == 0``) shards the micro-batches over pipe and injects
+    them on plan ticks.
     """
     n, m = cfg.pipe, cfg.n_micro
+    v = cfg.virtual_stages
     streaming = cfg.stream_inputs and n > 1
     if streaming and m % n:
         # don't silently drop a memory knob: streaming shards the
@@ -650,8 +839,8 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                         (p.shape[0] // bdiv,) + tuple(p.shape[1:]), p.dtype),
                     proto)
 
-            sk_protos = {kk: localize(v)
-                         for kk, v in (skip_protos or {}).items()}
+            sk_protos = {kk: localize(val)
+                         for kk, val in (skip_protos or {}).items()}
             loss_sum, g_stage, g_head, ig, _ = run_pipeline_tasks(
                 stage_apply, params, inputs_mb, cfg,
                 tplan=tplan, head_params=head_params,
@@ -673,6 +862,12 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
 
     def call(stage_params, head_params, inputs_mb, loss_args_mb):
         rank_arr = jnp.arange(n, dtype=jnp.int32)
+        if v > 1:
+            # stage-major [n*v, ...] -> rank-major [n, v, ...]: rank r
+            # hosts global stages {r, r + n, ...} (Megatron chunk layout)
+            stage_params = jax.tree.map(
+                lambda a: a.reshape((v, n) + a.shape[1:]).swapaxes(0, 1),
+                stage_params)
         if streaming:
             k = m // n
             inputs_mb = jax.tree.map(
@@ -715,6 +910,11 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
         loss = loss[-1]
         g_head = jax.tree.map(lambda a: a[-1], g_head)
         ig = jax.tree.map(lambda a: a[0], ig)
+        if v > 1:
+            # rank-major grads [n, v, ...] -> stage-major [n*v, ...]
+            g_stage = jax.tree.map(
+                lambda a: a.swapaxes(0, 1).reshape((n * v,) + a.shape[2:]),
+                g_stage)
         return loss, g_stage, g_head, ig
 
     return call, tplan
@@ -739,7 +939,15 @@ def pipeline_call(stage_apply: StageApplyFn,
     batch-ish dims may be sharded over the auto axes).  ``outputs`` gains a
     leading ``pipe``-sharded axis: index ``[-1]`` for the last stage's
     results (:func:`last_stage_output`).
+
+    Forward-only execution always runs the GPipe clock-cycle plan
+    (interleaving is a fused-training lever; inference has no backward
+    bubble to shrink).
     """
+    if cfg.virtual_stages > 1:
+        raise ValueError("interleaved schedules are train-only (use "
+                         "pipeline_grad_call); forward execution runs the "
+                         "clock-cycle plan")
     # Input modes across the shard_map boundary:
     #  * replicated (default): the transpose of the pipe-replicated in_spec
     #    is a psum over the *manual* axis — this both dominates collective

@@ -2,66 +2,94 @@
 
 :mod:`repro.core.schedules` is the single source of truth for execution
 order: it builds task tables (lists of ticks, each tick a list of
-``Task("F"|"B", micro, stage)``) and proves them against the paper's
-dependency graph (``schedules.validate``).  This module lowers a validated
-table to the *static* per-rank arrays the compiled tick loop
-(:func:`repro.core.pipeline.run_pipeline_tasks`) consumes.  There is exactly
-one executor; every workload — plain LM, skip-connection (U-Net / enc-dec),
-resident-state serving, streamed inputs — runs a :class:`TaskPlan`.
+``Task(kind, micro, stage)`` with ``stage`` a GLOBAL stage index) and proves
+them against the paper's dependency graph (``schedules.validate``).  This
+module lowers a validated table to the *static* per-rank arrays the compiled
+tick loop (:func:`repro.core.pipeline.run_pipeline_tasks`) consumes.  There
+is exactly one executor; every workload — plain LM, skip-connection (U-Net /
+enc-dec), resident-state serving, streamed inputs — runs a
+:class:`TaskPlan`.
 
-A plan carries four event families, all resolved at lowering time:
+A plan carries these event families, all resolved at lowering time:
 
-* **tasks** — ``kind[t, j]`` / ``micro[t, j]``: which F/B task rank ``j``
-  runs at tick ``t`` (NOP during bubbles).  Forward-only plans
-  (``has_backward=False``) contain only F tasks and are what inference /
-  autodiff-backward execution lowers to.
+* **tasks** — ``kind[t, r]`` / ``micro[t, r]`` / ``chunk[t, r]``: which
+  task rank ``r`` runs at tick ``t`` (NOP during bubbles).  With
+  interleaved virtual stages (``n_chunks > 1``) rank ``r`` hosts global
+  stages ``{r, r + R, ...}`` and ``chunk`` selects which of its parameter
+  chunks the tick touches.  Backward tasks come in three flavours: fused
+  ``BWD`` (input + weight cotangents in one tick), and the split pair
+  ``BWD_X`` (input cotangent, on the inter-stage critical path) /
+  ``BWD_W`` (weight gradient, filled into bubble ticks).
 
-* **activation stash** (the paper's "stashed activations"): F writes its
-  boundary input, the matching B reads and frees it.  Slots are assigned by
-  a per-stage free-list walk, so the high-water mark per stage is *exactly*
-  ``schedules.peak_stash`` — ``m`` for GPipe, ``min(n - j, m)`` for 1F1B.
-  The SPMD buffer depth is the max over stages; masked slot writes keep
-  rank ``j`` inside its own ``per_stage_stash[j]`` prefix, so the
-  *structural* footprint (what a per-device allocator would charge) is the
-  per-stage bound even though the XLA buffer is uniform.
+* **park buffer** (the paper's "stashed activations", donated): the ring
+  shift delivers a stage's boundary input one tick after the producer's F;
+  the value *parks* in a slot and stays there — the consuming F reads it
+  in place and, in F+B plans, the matching backward re-reads the same slot
+  for its recompute.  There is no separate inbox→stash copy: the arrival
+  buffer IS the stash (buffer donation), so per tick the executor does one
+  masked park write instead of a park write plus a stash write, and the
+  per-rank high-water (``per_stage_park``) is the true footprint a
+  per-device allocator charges — e.g. 0 slots for 1F1B's stage 0 (its
+  input is re-gathered from the micro-batch buffer, not stashed).
+  ``per_stage_stash`` keeps the schedule-level bound (``m`` for GPipe,
+  ``min(n - j, m)`` for 1F1B) for reporting against the paper.
 
-* **inboxes** — the ring shift delivers rank ``j-1``'s F output one tick
-  after it is produced, possibly several ticks before rank ``j`` consumes
-  it (1F1B interleaves); arrivals park in inbox slots.  A backward inbox,
-  symmetric, holds cotangents travelling ``j+1 -> j``.
+* **backward inbox** — cotangents travelling ``r+1 -> r`` park
+  symmetrically; in split-backward plans the seed stays parked after
+  ``BWD_X`` reads it so ``BWD_W`` can re-seed the weight-gradient VJP.
 
 * **skip routes** (:class:`RoutePlan`, lowered from ``SkipSpec`` edges,
   paper §3.3): one route per (edge, destination).  Portal mode sends the
-  value directly ``src -> dst`` with a single-pair collective-permute;
-  threaded mode relays it hop-by-hop through every intermediate rank (the
-  §3.3 symptomatic case).  The destination *parks* the value until its
-  consuming forward — and, in F+B plans, keeps holding it until the
-  consumer's backward so the recompute-under-VJP sees the same operand
-  (what ``jax.grad`` through the legacy loop kept alive implicitly as a
-  checkpoint residual).  Cotangent routes mirror the value routes in
-  reverse, seeding the producer's backward.
+  value directly ``src -> dst`` with a single-pair collective-permute
+  (an identity hold when both stages live on one rank); threaded mode
+  relays it hop-by-hop through every intermediate stage.  The destination
+  parks the value until its consuming forward and keeps holding it through
+  the consumer's backward(s); cotangent routes mirror the value routes in
+  reverse, seeding the producer's backward — and, split, its ``BWD_W``.
 
-* **stream injection** (``stream_rot``) — with ``cfg.stream_inputs`` the
-  micro-batches are sharded over pipe and rotated one hop towards stage 0;
-  the plan flags exactly the ticks where stage 0 consumes a fresh
-  micro-batch, so the rotation count stays aligned with the schedule even
-  when stage 0's forwards are not consecutive (1F1B steady state).
+* **stream injection** — with ``cfg.stream_inputs`` the micro-batches are
+  sharded over pipe and rotated one hop towards stage 0; ``stream_slot``
+  names the shard slot rank 0 consumes at each chunk-0 forward and
+  ``stream_rot`` flags the rotation ticks.
 
-Every array is ``[n_ticks, n]`` host-side numpy, turned into constants of
-the compiled program; nothing about the order is decided at runtime.
+* **segments** — maximal runs of ticks that use the same *branch set*
+  (e.g. GPipe's pure-F fill, 1F1B's mixed steady state, a ZB drain of
+  ``BWD_W`` only).  The executor runs one scan per segment with the
+  ``lax.switch`` pruned to exactly the branches the segment uses and the
+  bookkeeping (grad writes, stream rotation, chain permutes) elided when
+  the segment provably never needs it.  All-rank-NOP ticks are dropped
+  entirely at lowering time.
+
+Every array is ``[n_ticks, n_ranks]`` host-side numpy, turned into
+constants of the compiled program; nothing about the order is decided at
+runtime.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.configs.base import parse_schedule
 from repro.core import schedules
 from repro.core.schedules import Task
 from repro.core.skip import SkipSpec
 
-NOP, FWD, BWD = 0, 1, 2
+NOP, FWD, BWD, BWD_X, BWD_W = 0, 1, 2, 3, 4
+
+_KIND_OF = {"F": FWD, "B": BWD, "Bx": BWD_X, "Bw": BWD_W}
+
+#: backward flavours that compute input cotangents (ship down the b chain)
+BWD_INPUT_KINDS = (BWD, BWD_X)
+#: backward flavours that compute weight gradients
+BWD_WEIGHT_KINDS = (BWD, BWD_W)
+#: every backward flavour (reads the parked activation for its recompute)
+BWD_KINDS = (BWD, BWD_X, BWD_W)
+
+#: cap on executor segments: beyond this, adjacent segments are coalesced
+#: (their branch sets unioned) to bound trace/compile time.
+MAX_SEGMENTS = 8
 
 # sentinel for RoutePlan send arrays: transmit the value the stage produced
 # THIS tick (skips_out in forward routes, the VJP's skip cotangent in
@@ -70,18 +98,28 @@ SEND_STAGE = -2
 
 
 @dataclass(frozen=True)
+class Segment:
+    """One executor phase: ticks [start, stop) sharing a branch set."""
+    start: int
+    stop: int
+    kinds: Tuple[int, ...]        # sorted kind ids present (incl. NOP)
+
+
+@dataclass(frozen=True)
 class RoutePlan:
     """Lowered transfer schedule for one (skip edge, destination) flow.
 
-    ``send``/``recv``/``read`` are ``[T, n]`` int32: ``send`` is
+    ``send``/``recv``/``read`` are ``[T, R]`` int32: ``send`` is
     :data:`SEND_STAGE` on the tick a rank transmits its freshly produced
     value, a slot index when it relays a parked value (threaded hops), and
     ``-1`` otherwise; ``recv`` parks the in-flight value into a buffer slot
     the tick after the hop; ``read`` feeds a parked slot to the stage
-    compute (the consuming F, and — in F+B plans — the matching B's
-    recompute).  ``g_send``/``g_recv``/``g_read`` mirror them for the
-    cotangent flowing ``dst -> src``; ``g_read`` marks the producer's B
-    tick, where the parked cotangent seeds ``skips_out``'s VJP.
+    compute (the consuming F and every backward flavour that recomputes
+    it).  ``g_send``/``g_recv``/``g_read`` mirror them for the cotangent
+    flowing ``dst -> src``; ``g_read`` marks the producer's backward
+    tick(s), where the parked cotangent seeds ``skips_out``'s VJP.  Empty
+    ``fwd_perm``/``bwd_perm`` mean src and dst share a rank (interleaved
+    chunks): the "hop" is an identity hold, no collective.
     """
     name: str
     src: int
@@ -106,28 +144,39 @@ class RoutePlan:
 @dataclass(frozen=True)
 class TaskPlan:
     """Full fused-schedule event plan (the only executor input)."""
-    kind: np.ndarray          # [T, n] 0=NOP 1=F 2=B
-    micro: np.ndarray         # [T, n] micro index of the task (0 on NOP)
-    stash_slot: np.ndarray    # [T, n] F: slot written; B: slot read; -1 else
-    f_recv_slot: np.ndarray   # [T, n] fwd-chain arrival -> inbox slot; -1
-    f_read_slot: np.ndarray   # [T, n] F input inbox slot; -1 (stage 0/no F)
-    b_recv_slot: np.ndarray   # [T, n] bwd-chain arrival -> inbox slot; -1
-    b_read_slot: np.ndarray   # [T, n] B seed inbox slot; -1 (last stage/no B)
+    kind: np.ndarray          # [T, R] NOP/FWD/BWD/BWD_X/BWD_W
+    micro: np.ndarray         # [T, R] micro index of the task (0 on NOP)
+    chunk: np.ndarray         # [T, R] virtual-stage chunk of the task (0 ..)
+    park_recv: np.ndarray     # [T, R] ring arrival -> park slot; -1
+    park_read: np.ndarray     # [T, R] park slot this tick's task reads; -1
+    b_recv: np.ndarray        # [T, R] bwd-chain arrival -> inbox slot; -1
+    b_read: np.ndarray        # [T, R] B seed inbox slot (B/Bx and Bw); -1
+    fs_slot: np.ndarray       # [T, R] stream-stash slot (F write, B read); -1
+    stream_slot: np.ndarray   # [T] stream shard slot rank 0 consumes; -1
     stream_rot: np.ndarray    # [T] bool: rotate the input stream after tick t
+    segments: Tuple[Segment, ...]
     n_ticks: int
-    n_stages: int
+    n_stages: int             # GLOBAL stages (= n_ranks * n_chunks)
+    n_ranks: int
     n_micro: int
-    stash_depth: int          # SPMD stash buffer depth (max over stages)
-    f_inbox_depth: int
+    n_chunks: int
+    park_depth: int           # SPMD park buffer depth (max over ranks)
     b_inbox_depth: int
-    per_stage_stash: Tuple[int, ...]   # high-water per stage == peak_stash
+    fs_depth: int
+    per_stage_stash: Tuple[int, ...]   # schedule-level bound (peak_stash/rank)
+    per_stage_park: Tuple[int, ...]    # donated park high-water per rank
     has_backward: bool = True
     routes: Tuple[RoutePlan, ...] = ()
 
+    @property
+    def stash_depth(self) -> int:
+        """Depth of the (uniform SPMD) park buffer the executor allocates."""
+        return self.park_depth
+
     def per_stage_stash_bytes(self, bytes_per_micro: int) -> Tuple[int, ...]:
-        """Structural activation-stash footprint per stage (not flattened
-        to the SPMD max): ``min(n - j, m)`` micro-batches for 1F1B."""
-        return tuple(d * bytes_per_micro for d in self.per_stage_stash)
+        """Donated activation footprint per rank: what a per-device
+        allocator charges — the park high-water, NOT a flattened max."""
+        return tuple(d * bytes_per_micro for d in self.per_stage_park)
 
 
 class _SlotPool:
@@ -157,10 +206,10 @@ def _alloc_intervals(per_rank: Sequence[Sequence[Tuple[int, int, object]]]):
     slot is reusable strictly *after* its last-use tick (arrival parks at
     the start of a tick, reads/sends happen later the same tick, so
     same-tick reuse would clobber a live value).  Returns
-    ``({tag: slot}, depth)`` with depth the max high-water over ranks.
+    ``({tag: slot}, depth, per_rank_high)``.
     """
     assign: Dict[object, int] = {}
-    depth = 0
+    highs: List[int] = []
     for rank_events in per_rank:
         pool = _SlotPool()
         live: List[Tuple[int, object]] = []   # (last_use, tag)
@@ -173,11 +222,39 @@ def _alloc_intervals(per_rank: Sequence[Sequence[Tuple[int, int, object]]]):
             s = pool.alloc()
             assign[tag] = s
             live.append((c, tag))
-        depth = max(depth, pool.high)
-    return assign, depth
+        highs.append(pool.high)
+    return assign, max(highs, default=0), highs
 
 
-def _lower_routes(t_of: Dict[Task, int], T: int, m: int, n: int,
+class _TaskIndex:
+    """Tick lookup per (kind-family, micro, stage) for one compacted table."""
+
+    def __init__(self, table: Sequence[Sequence[Task]]):
+        self.f: Dict[Tuple[int, int], int] = {}
+        self.b: Dict[Tuple[int, int], int] = {}   # fused B or Bx
+        self.w: Dict[Tuple[int, int], int] = {}   # Bw (split only)
+        for t, tick in enumerate(table):
+            for task in tick:
+                if task.kind == "F":
+                    self.f[(task.micro, task.stage)] = t
+                elif task.kind in ("B", "Bx"):
+                    self.b[(task.micro, task.stage)] = t
+                elif task.kind == "Bw":
+                    self.w[(task.micro, task.stage)] = t
+
+    def last_b(self, i: int, s: int) -> int:
+        """Tick of the LAST backward reader of (i, s)'s activation."""
+        return self.w.get((i, s), self.b.get((i, s), -1))
+
+    def b_ticks(self, i: int, s: int) -> List[int]:
+        """Every backward tick that re-reads (i, s)'s operands."""
+        out = [self.b[(i, s)]]
+        if (i, s) in self.w:
+            out.append(self.w[(i, s)])
+        return out
+
+
+def _lower_routes(ix: _TaskIndex, T: int, m: int, ranks: int,
                   skips: Sequence[SkipSpec], portals: bool,
                   has_backward: bool) -> Tuple[RoutePlan, ...]:
     """Lower skip edges to per-(edge, dst) transfer schedules."""
@@ -185,76 +262,90 @@ def _lower_routes(t_of: Dict[Task, int], T: int, m: int, n: int,
     for spec in skips:
         for dst in spec.dsts:
             src = spec.src_stage
+
+            def rk(s):
+                return s % ranks
+
             if portals:
-                hops = [(src, dst)]
+                hop_stages = [(src, dst)]
             else:
-                hops = [(j, j + 1) for j in range(src, dst)]
-            fwd_perm = tuple(hops)
-            bwd_perm = tuple((b, a) for a, b in reversed(hops))
+                hop_stages = [(s, s + 1) for s in range(src, dst)]
+            fwd_perm = tuple((rk(a), rk(b)) for a, b in hop_stages
+                             if rk(a) != rk(b))
+            if len(set(fwd_perm)) != len(fwd_perm):
+                # a threaded chain spanning more than one chunk ring wraps
+                # onto the same physical link twice — one ppermute cannot
+                # carry two values over one pair.  Portals avoid this.
+                raise NotImplementedError(
+                    f"threaded route {spec.name!r} ({src}->{dst}) wraps the "
+                    f"rank ring under interleaving; use portals=True")
+            bwd_perm = tuple((b, a) for a, b in reversed(fwd_perm))
 
-            send = np.full((T, n), -1, np.int32)
-            recv = np.full((T, n), -1, np.int32)
-            read = np.full((T, n), -1, np.int32)
-            g_send = np.full((T, n), -1, np.int32)
-            g_recv = np.full((T, n), -1, np.int32)
-            g_read = np.full((T, n), -1, np.int32)
+            send = np.full((T, ranks), -1, np.int32)
+            recv = np.full((T, ranks), -1, np.int32)
+            read = np.full((T, ranks), -1, np.int32)
+            g_send = np.full((T, ranks), -1, np.int32)
+            g_recv = np.full((T, ranks), -1, np.int32)
+            g_read = np.full((T, ranks), -1, np.int32)
 
-            iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(n)]
-            g_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(n)]
-            relays = [b for _, b in hops[:-1]]       # ranks that re-send
+            iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(ranks)]
+            g_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(ranks)]
+            relays = [b for _, b in hop_stages[:-1]]     # stages that re-send
             for i in range(m):
                 # ---- value: src -> (relays) -> dst --------------------
-                send[t_of[Task("F", i, src)], src] = SEND_STAGE
+                send[ix.f[(i, src)], rk(src)] = SEND_STAGE
                 prev = src
                 for r in relays:
-                    arrive = t_of[Task("F", i, prev)] + 1
-                    resend = t_of[Task("F", i, r)]
-                    iv[r].append((arrive, resend, ("f", i, r)))
+                    arrive = ix.f[(i, prev)] + 1
+                    resend = ix.f[(i, r)]
+                    iv[rk(r)].append((arrive, resend, ("f", i, r)))
                     prev = r
-                arrive = t_of[Task("F", i, prev)] + 1
-                consume = t_of[Task("F", i, dst)]
-                hold = (t_of[Task("B", i, dst)] if has_backward else consume)
-                iv[dst].append((arrive, hold, ("f", i, dst)))
+                arrive = ix.f[(i, prev)] + 1
+                consume = ix.f[(i, dst)]
+                hold = (ix.last_b(i, dst) if has_backward else consume)
+                iv[rk(dst)].append((arrive, hold, ("f", i, dst)))
                 # ---- cotangent: dst -> (relays) -> src ----------------
                 if has_backward:
-                    g_send[t_of[Task("B", i, dst)], dst] = SEND_STAGE
+                    g_send[ix.b[(i, dst)], rk(dst)] = SEND_STAGE
                     prev = dst
                     for r in reversed(relays):
-                        arrive = t_of[Task("B", i, prev)] + 1
-                        resend = t_of[Task("B", i, r)]
-                        g_iv[r].append((arrive, resend, ("b", i, r)))
+                        arrive = ix.b[(i, prev)] + 1
+                        resend = ix.b[(i, r)]
+                        g_iv[rk(r)].append((arrive, resend, ("b", i, r)))
                         prev = r
-                    arrive = t_of[Task("B", i, prev)] + 1
-                    seed = t_of[Task("B", i, src)]
-                    g_iv[src].append((arrive, seed, ("b", i, src)))
+                    arrive = ix.b[(i, prev)] + 1
+                    g_iv[rk(src)].append((arrive, ix.last_b(i, src),
+                                          ("b", i, src)))
 
-            assign, depth = _alloc_intervals(iv)
+            assign, depth, _ = _alloc_intervals(iv)
             for i in range(m):
                 prev = src
                 for r in relays:
                     s = assign[("f", i, r)]
-                    recv[t_of[Task("F", i, prev)] + 1, r] = s
-                    send[t_of[Task("F", i, r)], r] = s
+                    recv[ix.f[(i, prev)] + 1, rk(r)] = s
+                    send[ix.f[(i, r)], rk(r)] = s
                     prev = r
                 s = assign[("f", i, dst)]
-                recv[t_of[Task("F", i, prev)] + 1, dst] = s
-                read[t_of[Task("F", i, dst)], dst] = s
+                recv[ix.f[(i, prev)] + 1, rk(dst)] = s
+                read[ix.f[(i, dst)], rk(dst)] = s
                 if has_backward:
-                    read[t_of[Task("B", i, dst)], dst] = s
+                    for tb in ix.b_ticks(i, dst):
+                        read[tb, rk(dst)] = s
 
             g_depth = 1
             if has_backward:
-                g_assign, g_depth = _alloc_intervals(g_iv)
+                g_assign, g_depth, _ = _alloc_intervals(g_iv)
                 for i in range(m):
                     prev = dst
                     for r in reversed(relays):
                         s = g_assign[("b", i, r)]
-                        g_recv[t_of[Task("B", i, prev)] + 1, r] = s
-                        g_send[t_of[Task("B", i, r)], r] = s
+                        g_recv[ix.b[(i, prev)] + 1, rk(r)] = s
+                        g_send[ix.b[(i, r)], rk(r)] = s
                         prev = r
                     s = g_assign[("b", i, src)]
-                    g_recv[t_of[Task("B", i, prev)] + 1, src] = s
-                    g_read[t_of[Task("B", i, src)], src] = s
+                    g_recv[ix.b[(i, prev)] + 1, rk(src)] = s
+                    for tb in ix.b_ticks(i, src):
+                        g_read[tb, rk(src)] = s
 
             routes.append(RoutePlan(
                 spec.name, src, dst, not portals, fwd_perm, bwd_perm,
@@ -263,114 +354,181 @@ def _lower_routes(t_of: Dict[Task, int], T: int, m: int, n: int,
     return tuple(routes)
 
 
+def _segments(kind: np.ndarray) -> Tuple[Segment, ...]:
+    """Maximal runs of ticks sharing a branch set, coalesced to a cap."""
+    T = kind.shape[0]
+    sets = [frozenset(int(k) for k in kind[t]) for t in range(T)]
+    segs: List[Tuple[int, int, frozenset]] = []
+    for t in range(T):
+        if segs and segs[-1][2] == sets[t]:
+            segs[-1] = (segs[-1][0], t + 1, segs[-1][2])
+        else:
+            segs.append((t, t + 1, sets[t]))
+    while len(segs) > MAX_SEGMENTS:
+        # merge the shortest segment into its shorter neighbour
+        li = min(range(len(segs)), key=lambda i: segs[i][1] - segs[i][0])
+        ni = li - 1 if li > 0 and (
+            li == len(segs) - 1
+            or (segs[li - 1][1] - segs[li - 1][0]
+                <= segs[li + 1][1] - segs[li + 1][0])) else li + 1
+        a, b = sorted((li, ni))
+        segs[a] = (segs[a][0], segs[b][1], segs[a][2] | segs[b][2])
+        del segs[b]
+    return tuple(Segment(s, e, tuple(sorted(ks))) for s, e, ks in segs)
+
+
 def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
+                ranks: Optional[int] = None,
                 skips: Sequence[SkipSpec] = (), portals: bool = True,
                 forward_only: bool = False) -> TaskPlan:
-    """Lower a validated task table to the fused executor's event plan."""
-    schedules.validate(table, m, n, checkpoint=False,
+    """Lower a validated task table to the fused executor's event plan.
+
+    ``n`` is the number of GLOBAL stages; ``ranks`` (default ``n``) the
+    number of executing devices — pass ``ranks < n`` for interleaved
+    tables, where rank ``r`` hosts the ``n // ranks`` chunks
+    ``{r, r + ranks, ...}``.
+    """
+    R = n if ranks is None else ranks
+    if n % R:
+        raise ValueError(f"stages ({n}) must tile ranks ({R})")
+    v = n // R
+    schedules.validate(table, m, n, ranks=R, checkpoint=False,
                        backward_micro_order=False, forward_only=forward_only)
+    # compact: all-rank-NOP ticks cost a full executor iteration for no work
+    table = [tick for tick in table
+             if any(t.kind != "R" for t in tick)]
     T = len(table)
-    t_of: Dict[Task, int] = {}
-    for t, tick in enumerate(table):
-        per_stage = set()
-        for task in tick:
-            if task.kind == "R":
-                continue           # recompute is fused into B by the VJP
-            assert task.stage not in per_stage, \
-                f"tick {t}: stage {task.stage} runs two tasks"
-            per_stage.add(task.stage)
-            t_of[task] = t
+    ix = _TaskIndex(table)
 
-    kind = np.full((T, n), NOP, np.int32)
-    micro = np.zeros((T, n), np.int32)
-    stash_slot = np.full((T, n), -1, np.int32)
-    f_recv = np.full((T, n), -1, np.int32)
-    f_read = np.full((T, n), -1, np.int32)
-    b_recv = np.full((T, n), -1, np.int32)
-    b_read = np.full((T, n), -1, np.int32)
+    kind = np.full((T, R), NOP, np.int32)
+    micro = np.zeros((T, R), np.int32)
+    chunk = np.zeros((T, R), np.int32)
+    park_recv = np.full((T, R), -1, np.int32)
+    park_read = np.full((T, R), -1, np.int32)
+    b_recv = np.full((T, R), -1, np.int32)
+    b_read = np.full((T, R), -1, np.int32)
+    fs_slot = np.full((T, R), -1, np.int32)
+    stream_slot = np.full((T,), -1, np.int32)
 
-    # --- task kinds + activation stash (per-stage free lists) --------------
-    stash_pools = [_SlotPool() for _ in range(n)]
-    live: List[Dict[int, int]] = [{} for _ in range(n)]   # stage -> micro->slot
     for t, tick in enumerate(table):
         for task in sorted(tick):
             if task.kind == "R":
-                continue
-            j = task.stage
-            kind[t, j] = FWD if task.kind == "F" else BWD
-            micro[t, j] = task.micro
-            if forward_only:
-                continue
-            if task.kind == "F":
-                s = stash_pools[j].alloc()
-                live[j][task.micro] = s
-                stash_slot[t, j] = s
-            else:
-                s = live[j].pop(task.micro)
-                stash_slot[t, j] = s
-                stash_pools[j].release(s)
-    assert all(not lv for lv in live), "unbalanced stash (missing backwards)"
+                continue           # recompute is fused into B by the VJP
+            r = task.stage % R
+            assert kind[t, r] == NOP, \
+                f"tick {t}: rank {r} runs two tasks"
+            kind[t, r] = _KIND_OF[task.kind]
+            micro[t, r] = task.micro
+            chunk[t, r] = task.stage // R
 
-    # --- inboxes: hold ring-shift arrivals until the consuming tick --------
-    def route(edges, recv, read):
-        """edges: per-rank list of (arrival_tick, consume_tick)."""
-        assign, depth = _alloc_intervals(
-            [[(a, c, (j, a, c)) for a, c in rank_edges]
-             for j, rank_edges in enumerate(edges)])
-        for j, rank_edges in enumerate(edges):
-            for a, c in rank_edges:
-                s = assign[(j, a, c)]
-                recv[a, j] = s
-                read[c, j] = s
-        return depth
-
-    f_edges: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
-    b_edges: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+    # --- park buffer: arrival -> consuming F -> (B/Bx and Bw) re-reads ----
+    park_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
     for i in range(m):
-        for j in range(1, n):
-            f_edges[j].append((t_of[Task("F", i, j - 1)] + 1,
-                               t_of[Task("F", i, j)]))
-        if not forward_only:
-            for j in range(n - 1):
-                b_edges[j].append((t_of[Task("B", i, j + 1)] + 1,
-                                   t_of[Task("B", i, j)]))
-    f_depth = route(f_edges, f_recv, f_read)
-    b_depth = route(b_edges, b_recv, b_read)
+        for s in range(1, n):
+            arrive = ix.f[(i, s - 1)] + 1
+            last = ix.f[(i, s)] if forward_only else ix.last_b(i, s)
+            park_iv[s % R].append((arrive, last, (i, s)))
+    p_assign, park_depth, park_high = _alloc_intervals(park_iv)
+    for i in range(m):
+        for s in range(1, n):
+            slot = p_assign[(i, s)]
+            park_recv[ix.f[(i, s - 1)] + 1, s % R] = slot
+            park_read[ix.f[(i, s)], s % R] = slot
+            if not forward_only:
+                for tb in ix.b_ticks(i, s):
+                    park_read[tb, s % R] = slot
 
-    # --- stream injection: rotate after each tick stage 0 consumes --------
-    stream_rot = (kind[:, 0] == FWD).copy()
-
-    per_stage = tuple(p.high for p in stash_pools)
+    # --- backward inbox: B(i,s+1)'s cotangent parks until B/Bx (and Bw) ---
+    b_depth = 1
     if not forward_only:
-        assert list(per_stage) == schedules.peak_stash(table, n, m), \
-            "stash allocator disagrees with schedules.peak_stash"
-    routes = _lower_routes(t_of, T, m, n, skips, portals,
+        b_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
+        for i in range(m):
+            for s in range(n - 1):
+                arrive = ix.b[(i, s + 1)] + 1
+                b_iv[s % R].append((arrive, ix.last_b(i, s), (i, s)))
+        b_assign, b_depth, _ = _alloc_intervals(b_iv)
+        for i in range(m):
+            for s in range(n - 1):
+                slot = b_assign[(i, s)]
+                b_recv[ix.b[(i, s + 1)] + 1, s % R] = slot
+                for tb in ix.b_ticks(i, s):
+                    b_read[tb, s % R] = slot
+
+    # --- stream stash: every F parks its fresh slice for the backward -----
+    fs_depth = 1
+    if not forward_only:
+        fs_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
+        for i in range(m):
+            for s in range(n):
+                fs_iv[s % R].append((ix.f[(i, s)], ix.last_b(i, s), (i, s)))
+        fs_assign, fs_depth, _ = _alloc_intervals(fs_iv)
+        for i in range(m):
+            for s in range(n):
+                slot = fs_assign[(i, s)]
+                fs_slot[ix.f[(i, s)], s % R] = slot
+                for tb in ix.b_ticks(i, s):
+                    fs_slot[tb, s % R] = slot
+
+    # --- stream injection: rank 0's chunk-0 forwards consume + rotate -----
+    stream_rot = (kind[:, 0] == FWD) & (chunk[:, 0] == 0)
+    for i in range(m):
+        stream_slot[ix.f[(i, 0)]] = i // R
+
+    per_stage_stash = tuple(schedules.peak_stash(table, n, ranks=R))
+    routes = _lower_routes(ix, T, m, R, skips, portals,
                            has_backward=not forward_only)
-    return TaskPlan(kind, micro, stash_slot, f_recv, f_read, b_recv, b_read,
-                    stream_rot, T, n, m,
-                    max(per_stage) if per_stage else 0,
-                    max(f_depth, 1), max(b_depth, 1), per_stage,
+    return TaskPlan(kind, micro, chunk, park_recv, park_read, b_recv, b_read,
+                    fs_slot, stream_slot, stream_rot, _segments(kind),
+                    T, n, R, m, v,
+                    park_depth, max(b_depth, 1), max(fs_depth, 1),
+                    per_stage_stash, tuple(park_high),
                     has_backward=not forward_only, routes=routes)
+
+
+def schedule_table(schedule: str, m: int, n: int):
+    """Build (but do not lower) the named schedule's task table.
+
+    Returns ``(table, n_stages, ranks)``.  ``"gpipe"``/``"gpipe_fwd"`` map
+    to the full GPipe fill/drain table (the clock the legacy autodiff path
+    also follows).
+    """
+    base, v = parse_schedule(schedule)
+    if base in ("gpipe", "gpipe_fwd", "gpipe_tasked"):
+        return schedules.gpipe_schedule(m, n, checkpoint=False), n, n
+    if base == "1f1b":
+        return schedules.one_f_one_b_schedule(m, n), n, n
+    if base == "interleaved":
+        return schedules.interleaved_1f1b_schedule(m, n, v), n * v, n
+    if base == "zb":
+        return schedules.zb_schedule(m, n), n, n
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def schedule_bubble(schedule: str, m: int, n: int) -> float:
+    """Dedicated-device bubble fraction of the named schedule's table
+    (cost-weighted critical-path idle share) — the dry-run cost model's
+    pipeline-efficiency term.  Returns 0 for a single-stage pipeline."""
+    if n <= 1:
+        return 0.0
+    table, n_stages, ranks = schedule_table(schedule, m, n)
+    return schedules.device_bubble_fraction(
+        table, ranks, schedules.default_task_cost(n_stages, ranks))
 
 
 def plan_for(schedule: str, m: int, n: int, *,
              skips: Sequence[SkipSpec] = (),
              portals: bool = True) -> TaskPlan:
-    """Build + lower the named schedule.
+    """Build + lower the named schedule for ``n`` pipe ranks.
 
-    ``"gpipe"``/``"gpipe_tasked"`` and ``"1f1b"`` produce full F+B plans
-    for the fused executor; ``"gpipe_fwd"`` produces the forward-only
-    clock-cycle plan (paper Algorithm 1) that inference and the
-    autodiff-backward path execute.
+    ``"gpipe"``/``"gpipe_tasked"``, ``"1f1b"``, ``"interleaved:v"`` and
+    ``"zb"`` produce full F+B plans for the fused executor;
+    ``"gpipe_fwd"`` produces the forward-only clock-cycle plan (paper
+    Algorithm 1) that inference and the autodiff-backward path execute.
     """
-    if schedule == "gpipe_fwd":
+    if parse_schedule(schedule)[0] == "gpipe_fwd":
         table = [list(tick) for tick in schedules.clock_cycles(m, n)]
         return lower_tasks(table, m, n, skips=skips, portals=portals,
                            forward_only=True)
-    if schedule in ("gpipe", "gpipe_tasked"):
-        table = schedules.gpipe_schedule(m, n, checkpoint=False)
-    elif schedule == "1f1b":
-        table = schedules.one_f_one_b_schedule(m, n)
-    else:
-        raise ValueError(f"unknown schedule {schedule!r}")
-    return lower_tasks(table, m, n, skips=skips, portals=portals)
+    table, n_stages, ranks = schedule_table(schedule, m, n)
+    return lower_tasks(table, m, n_stages, ranks=ranks, skips=skips,
+                       portals=portals)

@@ -11,18 +11,37 @@ paper's Algorithm 1 and its dependency constraints (§2.1).
 
 Task naming follows the paper: F(i, j) is the forward of micro-batch ``i`` on
 partition ``j``; B(i, j) its backward; R(i, j) the recomputation ``F'_{i,j}``.
+
+Beyond-paper schedules extend the same vocabulary:
+
+* **interleaved 1F1B** (Megatron-style virtual stages, Narayanan et al.):
+  the model is cut into ``n * v`` stages and rank ``r`` hosts the *chunks*
+  ``{r, r + n, ..., r + (v-1) n}``.  ``Task.stage`` is always the GLOBAL
+  stage index; the executing rank is ``stage % n``.  Finer stages shrink
+  the fill/drain bubble by ~``1/v`` at the cost of ``v``× more boundary
+  hops.
+
+* **zero-bubble split backward** (ZB-H1 flavour, arXiv 2405.18047 /
+  2401.10241): ``B`` is decomposed into ``Bx`` (input cotangent — the only
+  part on the inter-stage critical path) and ``Bw`` (weight gradient),
+  and the ``Bw`` tasks are drained into ticks where a rank would otherwise
+  idle.  ``Bx`` inherits B's dependency chain; ``Bw(i,j)`` only requires
+  ``Bx(i,j)``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+#: kinds that chain backwards across stages (B(i,j) needs <kind>(i,j+1))
+_BWD_CHAIN = ("B", "Bx")
 
 
 @dataclass(frozen=True, order=True)
 class Task:
-    kind: str        # "F" | "B" | "R"
+    kind: str        # "F" | "B" | "R" | "Bx" | "Bw"
     micro: int       # i  (0-indexed)
-    stage: int       # j  (0-indexed)
+    stage: int       # j  (0-indexed, GLOBAL stage — rank is stage % n_ranks)
 
     def __repr__(self) -> str:  # compact: F[i,j]
         return f"{self.kind}[{self.micro},{self.stage}]"
@@ -73,6 +92,62 @@ def gpipe_schedule(m: int, n: int, *, checkpoint: bool = True,
     return fwd + bwd
 
 
+# ---------------------------------------------------------------------------
+# Dependency-driven packing (shared by 1F1B / interleaved / zero-bubble)
+# ---------------------------------------------------------------------------
+
+def _pack(per_rank: Sequence[Sequence[Task]], ranks: int, n_stages: int,
+          *, fill_bw: bool = False) -> List[List[Task]]:
+    """Greedily pack fixed per-rank task orders into the earliest ticks that
+    satisfy the cross-stage dependencies (F(i,s) after F(i,s-1); a backward-
+    chain task after its successor stage's; the last stage's backward after
+    its own forward).
+
+    With ``fill_bw`` every executed ``Bx(i,s)`` enqueues ``Bw(i,s)`` on the
+    owning rank; a rank whose next main-queue task is not yet runnable (or
+    whose queue is drained) runs its oldest pending ``Bw`` instead — the
+    ZB-H1 bubble-filling rule.  ``Bw`` has no cross-rank dependencies, so
+    the fill can never deadlock.
+    """
+    done = {}
+    ptr = [0] * ranks
+    pending_w: List[List[Task]] = [[] for _ in range(ranks)]
+    table: List[List[Task]] = []
+    t = 0
+
+    def runnable(task: Task) -> bool:
+        if task.kind == "F":
+            return task.stage == 0 or Task("F", task.micro, task.stage - 1) in done
+        assert task.kind in _BWD_CHAIN
+        if task.stage == n_stages - 1:
+            return Task("F", task.micro, task.stage) in done
+        return any(Task(k, task.micro, task.stage + 1) in done
+                   for k in _BWD_CHAIN)
+
+    while any(ptr[r] < len(per_rank[r]) for r in range(ranks)) \
+            or any(pending_w):
+        tick: List[Task] = []
+        for r in range(ranks):
+            task: Optional[Task] = None
+            if ptr[r] < len(per_rank[r]) and runnable(per_rank[r][ptr[r]]):
+                task = per_rank[r][ptr[r]]
+                ptr[r] += 1
+            elif pending_w[r]:
+                task = pending_w[r].pop(0)
+            if task is not None:
+                tick.append(task)
+        if not tick:
+            raise RuntimeError(f"schedule deadlock at tick {t}, ptrs={ptr}")
+        for task in tick:
+            done[task] = t
+            if fill_bw and task.kind == "Bx":
+                pending_w[task.stage % ranks].append(
+                    Task("Bw", task.micro, task.stage))
+        table.append(tick)
+        t += 1
+    return table
+
+
 def one_f_one_b_schedule(m: int, n: int) -> List[List[Task]]:
     """1F1B (PipeDream-flush) schedule — beyond-paper optimization.
 
@@ -82,120 +157,294 @@ def one_f_one_b_schedule(m: int, n: int) -> List[List[Task]]:
 
     Built per-stage: stage ``j`` runs ``min(n - j, m)`` warmup forwards, then
     alternates 1F/1B, then drains remaining backwards.  The global table is
-    produced by simulating the per-stage queues under the cross-stage
+    produced by packing the per-stage queues under the cross-stage
     dependencies (F(i,j) needs F(i,j-1); B(i,j) needs B(i,j+1)).
     """
-    per_stage: List[List[Task]] = []
-    for j in range(n):
-        warm = min(n - j, m)
-        order: List[Task] = [Task("F", i, j) for i in range(warm)]
-        fi, bi = warm, 0
-        while bi < m:
-            order.append(Task("B", bi, j)); bi += 1
-            if fi < m:
-                order.append(Task("F", fi, j)); fi += 1
-        per_stage.append(order)
+    per_rank = [_one_f_one_b_order(m, n, j, bwd_kind="B") for j in range(n)]
+    return _pack(per_rank, n, n)
 
-    done = set()
-    ptr = [0] * n
-    table: List[List[Task]] = []
-    while any(ptr[j] < len(per_stage[j]) for j in range(n)):
-        tick: List[Task] = []
-        for j in range(n):
-            if ptr[j] >= len(per_stage[j]):
-                continue
-            t = per_stage[j][ptr[j]]
-            dep_ok = (
-                (t.kind == "F" and (t.stage == 0 or Task("F", t.micro, t.stage - 1) in done))
-                or (t.kind == "B" and (t.stage == n - 1 or Task("B", t.micro, t.stage + 1) in done))
-            )
-            if dep_ok:
-                tick.append(t)
-        if not tick:
-            raise RuntimeError(f"1F1B deadlock at ptrs={ptr} (m={m}, n={n})")
-        for t in tick:
-            done.add(t)
-            ptr[t.stage] += 1
-        table.append(tick)
-    return table
+
+def _one_f_one_b_order(m: int, n: int, j: int, *, bwd_kind: str) -> List[Task]:
+    """Stage ``j``'s 1F1B issue order: warmup forwards, steady 1F/1B, drain."""
+    warm = min(n - j, m)
+    order: List[Task] = [Task("F", i, j) for i in range(warm)]
+    fi, bi = warm, 0
+    while bi < m:
+        order.append(Task(bwd_kind, bi, j)); bi += 1
+        if fi < m:
+            order.append(Task("F", fi, j)); fi += 1
+    return order
+
+
+def interleaved_1f1b_schedule(m: int, n: int, v: int) -> List[List[Task]]:
+    """Interleaved 1F1B with ``v`` virtual stages (chunks) per rank.
+
+    Megatron-style (Narayanan et al., PAPERS.md): global stage
+    ``s = c * n + r`` runs on rank ``r = s % n``; micro-batches advance in
+    waves of ``n``, cycling through the chunks, so the fill bubble shrinks
+    from ``(n-1)`` full-stage slots to ``(n-1)`` chunk slots (≈ ``1/v``).
+    Requires ``m % n == 0`` (the wave width), per Megatron.
+    """
+    if v < 1:
+        raise ValueError(f"need v >= 1, got {v=}")
+    if v == 1:
+        return one_f_one_b_schedule(m, n)
+    if m % n:
+        raise ValueError(
+            f"interleaved schedule needs n_micro ({m}) divisible by "
+            f"pipe ({n})")
+
+    def unit(r: int, k: int, *, back: bool) -> Task:
+        c = (k // n) % v
+        if back:
+            c = v - 1 - c
+        i = (k // (n * v)) * n + (k % n)
+        return Task("B" if back else "F", i, c * n + r)
+
+    total = m * v
+    per_rank: List[List[Task]] = []
+    for r in range(n):
+        warm = min((n - r - 1) * 2 + (v - 1) * n, total)
+        order = [unit(r, k, back=False) for k in range(warm)]
+        fi, bi = warm, 0
+        while bi < total:
+            if fi < total:
+                order.append(unit(r, fi, back=False)); fi += 1
+            order.append(unit(r, bi, back=True)); bi += 1
+        per_rank.append(order)
+    return _pack(per_rank, n, n * v)
+
+
+def zb_schedule(m: int, n: int) -> List[List[Task]]:
+    """ZB-H1-style split-backward schedule (arXiv 2405.18047).
+
+    1F1B's issue order with ``B`` replaced by ``Bx`` (input cotangent — the
+    only backward half other stages wait for), while the decoupled weight
+    gradients ``Bw`` fill ticks where a rank's main queue is blocked and the
+    drain tail.  Same flush semantics and activation bound as 1F1B; the
+    bubble fraction drops because former idle slots now do useful work.
+    """
+    per_rank = [_one_f_one_b_order(m, n, j, bwd_kind="Bx") for j in range(n)]
+    return _pack(per_rank, n, n, fill_bw=True)
 
 
 # ---------------------------------------------------------------------------
 # Schedule metrics (used by tests and by the balance/bubble reporting)
 # ---------------------------------------------------------------------------
 
-def bubble_fraction(m: int, n: int) -> float:
-    """GPipe bubble fraction (n-1)/(m+n-1) — idle tick share per stage."""
+def bubble_fraction(table: Sequence[Sequence[Task]], *,
+                    ranks: Optional[int] = None) -> float:
+    """Idle share of the table: idle (rank, tick) slots / total slots.
+
+    Computed from the task table itself, so it is correct for every
+    schedule shape — GPipe's fill/drain gives the paper's closed form
+    ``(n-1)/(m+n-1)``, 1F1B the same, interleaved ≈ ``(n-1)/v`` chunk
+    slots, and split-backward tables get credit for the ``Bw``-filled
+    ticks.  ``ranks`` defaults to the number of distinct executing ranks
+    (``stage % ranks``) inferred as ``max stage + 1``; pass it explicitly
+    for chunked tables.  R (recompute) tasks ride along with their B and
+    are not counted as separate busy slots.
+    """
+    if not table:
+        return 0.0
+    if ranks is None:
+        ranks = max(t.stage for tick in table for t in tick) + 1
+    T = len(table)
+    busy = sum(1 for tick in table for t in tick if t.kind != "R")
+    return 1.0 - busy / (T * ranks)
+
+
+def ideal_bubble_fraction(m: int, n: int) -> float:
+    """The paper's closed form for the GPipe clock: (n-1)/(m+n-1)."""
     return (n - 1) / (m + n - 1)
 
 
-def peak_stash(table: Sequence[Sequence[Task]], n: int, m: int) -> List[int]:
-    """Peak number of outstanding forward activations stashed per stage."""
-    live = [0] * n
-    peak = [0] * n
+def peak_stash(table: Sequence[Sequence[Task]], n: int,
+               *, ranks: Optional[int] = None) -> List[int]:
+    """Peak number of outstanding forward activations stashed per stage.
+
+    An activation goes live at its F and is freed by the LAST backward
+    reader: ``B`` for fused tables, ``Bw`` for split-backward tables (the
+    weight gradient still needs the stage input after ``Bx`` ran).  With
+    ``ranks`` given, stages co-resident on one rank (interleaved chunks)
+    are aggregated into per-RANK peaks — the footprint a device allocator
+    actually charges.
+    """
+    has_bw = any(t.kind == "Bw" for tick in table for t in tick)
+    free_kind = "Bw" if has_bw else "B"
+    slots = ranks if ranks is not None else n
+    live = [0] * slots
+    peak = [0] * slots
     for tick in table:
         for t in tick:
+            r = t.stage % slots
             if t.kind == "F":
-                live[t.stage] += 1
-                peak[t.stage] = max(peak[t.stage], live[t.stage])
-            elif t.kind == "B":
-                live[t.stage] -= 1
+                live[r] += 1
+                peak[r] = max(peak[r], live[r])
+            elif t.kind == free_kind:
+                live[r] -= 1
     return peak
 
 
+def default_task_cost(n_stages: int, ranks: Optional[int] = None):
+    """Per-task cost model of the FUSED EXECUTOR, in stage-forward units.
+
+    A stage holds ``ranks / n_stages`` of the model, so interleaved chunks
+    cost proportionally less per task.  Backward flavours reflect what the
+    executor actually runs (remat recompute included): fused ``B`` =
+    recompute + input-grad + weight-grad = 3 forwards' work; split ``Bx`` /
+    ``Bw`` = recompute + one gradient half = 2 each (the split pays one
+    extra recompute per micro — ZB's remat tradeoff, visible here rather
+    than hidden).
+    """
+    ranks = n_stages if ranks is None else ranks
+    share = ranks / n_stages          # fraction of the model per stage
+    per_kind = {"F": 1.0, "B": 3.0, "Bx": 2.0, "Bw": 2.0, "R": 0.0}
+
+    def cost(task: Task) -> float:
+        return per_kind[task.kind] * share
+    return cost
+
+
+def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
+                          cost_of=None) -> Tuple[float, List[float]]:
+    """Event-driven critical path of a table on ``ranks`` DEDICATED devices.
+
+    Each rank executes its tasks in table order; a task starts when its
+    rank is free AND its cross-stage dependencies (F chain, backward
+    chain, Bw-after-Bx) have finished — i.e. the asynchronous execution a
+    real accelerator group gives the same issue order, with zero comm
+    latency.  Returns ``(t_end, per_rank_busy)``; the pipeline bubble a
+    device group actually pays is ``1 - sum(busy) / (ranks * t_end)``.
+
+    This is the schedule-comparison clock for the speed tables: a
+    single-host CPU bench timeshares every "device" over the same cores,
+    so measured wall-clock reflects TOTAL work, not the critical path the
+    schedule shortens (benchmarks/util.py documents the same convention
+    for the paper-table model).
+    """
+    n_stages = max((t.stage for tick in table for t in tick), default=0) + 1
+    if cost_of is None:
+        cost_of = default_task_cost(n_stages, ranks)
+    split = any(t.kind == "Bx" for tick in table for t in tick)
+    bk = "Bx" if split else "B"
+    finish: dict = {}
+    rank_free = [0.0] * ranks
+    busy = [0.0] * ranks
+    for tick in table:
+        for task in sorted(tick):
+            if task.kind == "R":
+                continue
+            deps: List[Task] = []
+            if task.kind == "F":
+                if task.stage > 0:
+                    deps.append(Task("F", task.micro, task.stage - 1))
+            elif task.kind == bk:
+                if task.stage == n_stages - 1:
+                    deps.append(Task("F", task.micro, task.stage))
+                else:
+                    deps.append(Task(bk, task.micro, task.stage + 1))
+            elif task.kind == "Bw":
+                deps.append(Task("Bx", task.micro, task.stage))
+            r = task.stage % ranks
+            start = max([rank_free[r]] + [finish[d] for d in deps])
+            c = cost_of(task)
+            finish[task] = start + c
+            rank_free[r] = start + c
+            busy[r] += c
+    return max(rank_free, default=0.0), busy
+
+
+def device_bubble_fraction(table: Sequence[Sequence[Task]], ranks: int,
+                           cost_of=None) -> float:
+    """Idle share of the dedicated-device critical path (cost-weighted)."""
+    t_end, busy = simulate_device_times(table, ranks, cost_of)
+    if t_end <= 0:
+        return 0.0
+    return 1.0 - sum(busy) / (ranks * t_end)
+
+
 def validate(table: Sequence[Sequence[Task]], m: int, n: int,
-             *, checkpoint: bool = False,
+             *, ranks: Optional[int] = None,
+             checkpoint: bool = False,
              recompute_last_micro: bool = False,
              backward_micro_order: bool = True,
              forward_only: bool = False) -> None:
     """Assert the schedule respects every dependency in the paper's §2 graph.
 
+    ``n`` is the number of (global) stages; ``ranks`` the number of
+    executing devices (defaults to ``n``; chunked tables pass the physical
+    rank count so per-rank single-task-per-tick is enforced across chunks).
+
     Raises AssertionError on: missing/duplicate tasks, F(i,j) before
-    F(i,j-1), B(i,j) before B(i,j+1), per-stage micro-batch order violations
-    (F(i+1,j) before F(i,j) / B(i-1,j) before B(i,j), the dashed arrows of
-    Fig. 2), or a B(i,j) without its R(i,j) earlier in the same stage.
+    F(i,j-1), a backward-chain task before its successor stage's,
+    per-stage micro-batch order violations (F(i+1,j) before F(i,j) /
+    B(i-1,j) before B(i,j), the dashed arrows of Fig. 2), a B(i,j) without
+    its R(i,j) earlier in the same stage, or — for split-backward tables —
+    a ``Bw(i,j)`` missing or preceding its ``Bx(i,j)``.
 
     ``backward_micro_order=False`` relaxes the B-side dashed-arrow order:
     1F1B deliberately drains early backwards (B[i] before B[i+1] at a
     stage), which is a *schedule choice* in GPipe, not a data dependency.
 
     ``forward_only=True`` validates an inference / autodiff-backward plan:
-    the table must cover every F task and contain no B at all (the reverse
-    clock-cycle is induced outside the table).
+    the table must cover every F task and contain no backward at all (the
+    reverse clock-cycle is induced outside the table).
     """
+    ranks = n if ranks is None else ranks
     seen = {}
     order = 0
     for tick in table:
-        stages_this_tick = set()
+        ranks_this_tick = set()
         for t in tick:
             assert t not in seen, f"duplicate {t}"
-            assert (t.stage, t.kind) not in stages_this_tick, \
-                f"stage {t.stage} runs two {t.kind} tasks in one tick"
-            stages_this_tick.add((t.stage, t.kind))
+            assert 0 <= t.stage < n, f"{t} stage out of range (n={n})"
+            key = (t.stage % ranks, t.kind in ("B", "Bx", "Bw"), t.kind == "R")
+            assert key not in ranks_this_tick, \
+                f"rank {t.stage % ranks} runs two {t.kind}-side tasks in one tick"
+            ranks_this_tick.add(key)
             seen[t] = order
         order += 1
-    expect_f = {Task("F", i, j) for i in range(m) for j in range(n)}
-    expect_b = {Task("B", i, j) for i in range(m) for j in range(n)}
     have = set(seen)
+    split = any(t.kind in ("Bx", "Bw") for t in have)
+    bk = "Bx" if split else "B"
+    expect_f = {Task("F", i, j) for i in range(m) for j in range(n)}
     assert expect_f <= have, f"missing forwards: {sorted(expect_f - have)[:4]}"
     if forward_only:
-        assert not any(t.kind == "B" for t in have), \
+        assert not any(t.kind != "F" for t in have), \
             "forward-only table contains backward tasks"
     else:
+        expect_b = {Task(bk, i, j) for i in range(m) for j in range(n)}
         assert expect_b <= have, \
             f"missing backwards: {sorted(expect_b - have)[:4]}"
+        if split:
+            expect_w = {Task("Bw", i, j) for i in range(m) for j in range(n)}
+            assert expect_w <= have, \
+                f"missing weight grads: {sorted(expect_w - have)[:4]}"
+            assert not any(t.kind == "B" for t in have), \
+                "split-backward table mixes fused B with Bx/Bw"
     for i in range(m):
         for j in range(n):
+            if forward_only:
+                if j > 0:
+                    assert seen[Task("F", i, j - 1)] < seen[Task("F", i, j)]
+                if i > 0:
+                    assert seen[Task("F", i - 1, j)] < seen[Task("F", i, j)]
+                continue
+            assert seen[Task("F", i, j)] < seen[Task(bk, i, j)], \
+                f"F[{i},{j}] must precede {bk}[{i},{j}]"
+            if split:
+                assert seen[Task("Bx", i, j)] < seen[Task("Bw", i, j)], \
+                    f"Bx[{i},{j}] must precede Bw[{i},{j}]"
             if j > 0:
                 assert seen[Task("F", i, j - 1)] < seen[Task("F", i, j)]
-                if not forward_only:
-                    assert seen[Task("B", i, j)] < seen[Task("B", i, j - 1)]
+                assert seen[Task(bk, i, j)] < seen[Task(bk, i, j - 1)]
             if i > 0:
                 assert seen[Task("F", i - 1, j)] < seen[Task("F", i, j)], \
                     f"micro-batch order: F[{i-1},{j}] !< F[{i},{j}]"
-                if backward_micro_order and not forward_only:
-                    assert seen[Task("B", i, j)] < seen[Task("B", i - 1, j)], \
-                        f"micro-batch order: B[{i},{j}] !< B[{i-1},{j}]"
+                if backward_micro_order:
+                    assert seen[Task(bk, i, j)] < seen[Task(bk, i - 1, j)], \
+                        f"micro-batch order: {bk}[{i},{j}] !< {bk}[{i-1},{j}]"
             if checkpoint:
                 needs_r = recompute_last_micro or i != m - 1
                 if needs_r:

@@ -28,6 +28,7 @@ from repro import compat
 from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import SHAPES_BY_NAME
+from repro.core import plan as plan_lib
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models.lm import LMModel
@@ -67,6 +68,14 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     mf = analysis.model_flops_for(arch, shape) / n_dev
     per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
                      - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    # the cost model is schedule-parametric: a train cell's step time is
+    # stretched by the SELECTED schedule's dedicated-device bubble (1F1B
+    # and GPipe share a critical path; interleaved shrinks the fill by
+    # ~1/v; zb fills bubbles with Bw work but pays a recompute) — not by
+    # the GPipe clock unconditionally.
+    bubble = (plan_lib.schedule_bubble(pcfg.schedule, pcfg.n_micro,
+                                       pcfg.pipe)
+              if shape.kind == "train" else 0.0)
     rep = analysis.RooflineReport(
         arch=arch_name, shape=shape_name,
         mesh="2x16x16" if multi_pod else "16x16",
@@ -75,7 +84,9 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         model_flops_per_dev=mf, n_devices=n_dev,
         memory_per_device=per_dev_bytes,
         xla_flops=float(ca.get("flops", 0.0)),
-        notes=f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro}")
+        schedule=pcfg.schedule, bubble_fraction=round(bubble, 4),
+        notes=f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
+              f"sched={pcfg.schedule}")
     out = rep.to_dict()
     out.update({
         "skipped": False,

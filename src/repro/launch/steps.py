@@ -38,16 +38,17 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
 
     ``pcfg.schedule`` selects the execution order: the default ``"gpipe"``
     runs the forward clock-cycle and lets autodiff induce the reverse
-    clock-cycle; ``"1f1b"`` / ``"gpipe_tasked"`` run the fused scheduler,
-    where backward tasks execute inside the tick loop per the task table
-    (see repro.core.plan) and the activation stash is sized structurally.
+    clock-cycle; ``"1f1b"`` / ``"gpipe_tasked"`` / ``"interleaved:v"`` /
+    ``"zb"`` run the fused scheduler, where backward tasks execute inside
+    the tick loop per the task table (see repro.core.plan) and the
+    activation stash is sized structurally.
     """
     ocfg = ocfg or optim.OptimizerConfig()
-    if pcfg.schedule in ("1f1b", "gpipe_tasked"):
+    if pcfg.schedule_base in ("1f1b", "gpipe_tasked", "interleaved", "zb"):
         return _build_train_step_fused(model, pcfg, mesh, shape, ocfg)
     if pcfg.schedule != "gpipe":
-        raise ValueError(f"unknown schedule {pcfg.schedule!r}; "
-                         "want 'gpipe', 'gpipe_tasked', or '1f1b'")
+        raise ValueError(f"unknown schedule {pcfg.schedule!r}; want 'gpipe', "
+                         "'gpipe_tasked', '1f1b', 'interleaved:v', or 'zb'")
     consts = model.consts()
     stage_apply = model.make_stage_apply(consts)
     mbg = shape.global_batch // pcfg.n_micro

@@ -58,7 +58,9 @@ class LMModel:
     def __post_init__(self):
         a = self.arch
         self.total_layers = a.n_layers + a.enc_layers
-        self.n_stages = self.pcfg.pipe
+        # interleaved schedules cut the model into pipe * v GLOBAL stages;
+        # rank r hosts the v chunks {r, r + pipe, ...} (Megatron layout)
+        self.n_stages = self.pcfg.pipe * self.pcfg.virtual_stages
         self.L_per_stage, mask = stage_lib.pad_layout(self.total_layers,
                                                       self.n_stages)
         self.layer_mask = mask                      # np [n_stages, L]

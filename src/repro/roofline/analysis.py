@@ -364,6 +364,14 @@ class RooflineReport:
     memory_per_device: float = 0.0
     xla_flops: float = 0.0       # raw cost_analysis (uncorrected), reference
     notes: str = ""
+    schedule: str = "gpipe"
+    # idle share of the selected schedule's dedicated-device critical path
+    # (repro.core.schedules.device_bubble_fraction of the ACTUAL task
+    # table — 0 for non-pipelined cells).  The roofline terms below count
+    # executed work, which a pipelined step stretches by the bubble; the
+    # step-time estimate divides by (1 - bubble) so dry-run numbers track
+    # the selected schedule rather than assuming the GPipe clock.
+    bubble_fraction: float = 0.0
     hw: HardwareConstants = field(default_factory=lambda: V5E)
 
     @property
@@ -385,8 +393,13 @@ class RooflineReport:
         return max(ts, key=ts.get)
 
     @property
+    def pipeline_efficiency(self) -> float:
+        return 1.0 - self.bubble_fraction
+
+    @property
     def step_time(self) -> float:
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        busy = max(self.t_compute, self.t_memory, self.t_collective)
+        return busy / max(self.pipeline_efficiency, 1e-9)
 
     @property
     def useful_ratio(self) -> float:
@@ -408,6 +421,9 @@ class RooflineReport:
             "xla_flops": self.xla_flops,
             "t_compute": self.t_compute, "t_memory": self.t_memory,
             "t_collective": self.t_collective,
+            "schedule": self.schedule,
+            "bubble_fraction": self.bubble_fraction,
+            "step_time": self.step_time,
             "bottleneck": self.bottleneck,
             "useful_ratio": self.useful_ratio,
             "roofline_fraction": self.roofline_fraction,

@@ -1,11 +1,13 @@
 """Schedule-driven execution: the fused scheduler (repro.core.plan +
-run_pipeline_tasks) must make 1F1B and GPipe *the same computation in a
-different order* — bitwise-identical losses and gradients — and must match
-the legacy autodiff backward to numerical tolerance.
+run_pipeline_tasks) must make 1F1B, GPipe, interleaved and split-backward
+*the same computation in a different order* — bitwise-identical losses and
+gradients — and must match the legacy autodiff backward to numerical
+tolerance.
 
 Host-side plan properties run in-process; executor equivalence runs on 8
 XLA host devices in a subprocess (one subprocess amortizes jit time over
 the whole (pipe, m) grid)."""
+import numpy as np
 import pytest
 
 from conftest import run_subprocess
@@ -20,57 +22,148 @@ from repro.core import schedules as S
 
 @pytest.mark.parametrize("m,n", [(1, 1), (4, 1), (1, 4), (4, 2), (8, 2),
                                  (4, 4), (8, 4), (6, 3)])
-def test_plan_stash_matches_peak_stash(m, n):
-    """The executor's stash buffer is sized by the plan; the plan's
-    per-stage high-water mark must equal schedules.peak_stash exactly."""
+def test_plan_stash_bound_and_donated_park(m, n):
+    """``per_stage_stash`` carries the schedule-level bound (peak_stash:
+    ``m`` for GPipe, ``min(n - j, m)`` for 1F1B); ``per_stage_park`` is the
+    DONATED arrival-buffer high-water the executor actually allocates —
+    non-uniform, with stage 0 parking nothing (its input is re-gathered,
+    not stashed), and never above bound + the one-tick in-flight arrival."""
     for name, table in (("gpipe", S.gpipe_schedule(m, n, checkpoint=False)),
                         ("1f1b", S.one_f_one_b_schedule(m, n))):
         plan = PL.lower_tasks(table, m, n)
-        assert list(plan.per_stage_stash) == S.peak_stash(table, n, m), name
-        assert plan.stash_depth == max(plan.per_stage_stash)
+        assert list(plan.per_stage_stash) == S.peak_stash(table, n), name
+        assert plan.park_depth == max(plan.per_stage_park)
+        assert plan.per_stage_park[0] == 0     # stage 0: nothing to park
+        for j in range(n):
+            assert plan.per_stage_park[j] <= plan.per_stage_stash[j] + 1
     gpipe = PL.plan_for("gpipe", m, n)
     f1b = PL.plan_for("1f1b", m, n)
     assert all(gpipe.per_stage_stash[j] == m for j in range(n))
-    # the true per-stage depth, not the flattened SPMD max (satellite):
-    # stage j stashes exactly min(n - j, m) micro-batches under 1F1B
+    # the true per-stage bound, not a flattened SPMD max: stage j stashes
+    # at most min(n - j, m) micro-batches under 1F1B
     assert all(f1b.per_stage_stash[j] == min(n - j, m) for j in range(n))
     assert (f1b.per_stage_stash_bytes(100)
-            == tuple(100 * min(n - j, m) for j in range(n)))
+            == tuple(100 * d for d in f1b.per_stage_park))
     # 1F1B's memory bound is the point: strictly better whenever m > n
-    if m > n:
-        assert f1b.stash_depth < gpipe.stash_depth
+    if m > n and n > 1:
+        assert f1b.park_depth < gpipe.park_depth
 
 
-@pytest.mark.parametrize("m,n", [(4, 2), (8, 4), (5, 3)])
-def test_plan_task_coverage(m, n):
-    """Every F and B task appears exactly once, at most one task per rank
-    per tick, and ring arrivals never overtake their consumers."""
-    for name in ("gpipe", "1f1b"):
-        p = PL.plan_for(name, m, n)
-        seen = set()
+@pytest.mark.parametrize("schedule,v", [("gpipe", 1), ("1f1b", 1),
+                                        ("zb", 1), ("interleaved:2", 2)])
+@pytest.mark.parametrize("m,n", [(4, 2), (8, 4), (4, 4)])
+def test_plan_task_coverage(schedule, v, m, n):
+    """Every task appears exactly once, at most one task per rank per tick,
+    park/backward-inbox arrivals never overtake their consumers, and every
+    parked slot is consumed."""
+    p = PL.plan_for(schedule, m, n)
+    assert p.n_ranks == n and p.n_chunks == v and p.n_stages == n * v
+    split = schedule == "zb"
+    seen = set()
+    for t in range(p.n_ticks):
+        for j in range(n):
+            k = p.kind[t, j]
+            if k == PL.NOP:
+                continue
+            s = int(p.chunk[t, j]) * n + j
+            task = (int(k), int(p.micro[t, j]), s)
+            assert task not in seen, task
+            seen.add(task)
+            if s > 0 and k == PL.FWD:
+                assert p.park_read[t, j] >= 0   # boundary input is parked
+    per_stage_kinds = 3 if split else 2
+    assert len(seen) == per_stage_kinds * m * n * v, schedule
+    # slot pairing: a parked value is read at least once before its slot is
+    # overwritten, and nothing stays parked forever
+    for arr, rd in ((p.park_recv, p.park_read), (p.b_recv, p.b_read)):
+        for j in range(n):
+            events = []
+            for t in range(p.n_ticks):
+                if arr[t, j] >= 0:
+                    events.append(("park", t, int(arr[t, j])))
+                if rd[t, j] >= 0:
+                    events.append(("read", t, int(rd[t, j])))
+            read_since_park = {}
+            # sort by (tick, event): "park" < "read", so a same-tick
+            # arrive-then-consume pairs up correctly
+            for ev, t, slot in sorted(events, key=lambda e: (e[1], e[0])):
+                if ev == "park":
+                    assert read_since_park.get(slot, True), \
+                        f"slot {slot} overwritten unread at tick {t}"
+                    read_since_park[slot] = False
+                elif slot in read_since_park:
+                    read_since_park[slot] = True
+            assert all(read_since_park.values()), \
+                f"rank {j}: parked value never consumed"
+
+
+def test_plan_zb_split_events():
+    """Split-backward lowering: Bw re-reads the SAME park / b-inbox slots
+    its Bx used (the weight grad re-seeds from the parked cotangent), and
+    ticks where a rank would idle under 1F1B now carry Bw work."""
+    m, n = 8, 4
+    p = PL.plan_for("zb", m, n)
+    f1b = PL.plan_for("1f1b", m, n)
+    kinds = set(int(k) for k in p.kind.ravel())
+    assert PL.BWD_X in kinds and PL.BWD_W in kinds and PL.BWD not in kinds
+    # every (micro, stage) Bx/Bw pair shares its park slot
+    for j in range(n):
+        by_micro = {}
         for t in range(p.n_ticks):
-            for j in range(n):
-                k = p.kind[t, j]
-                if k == PL.NOP:
-                    continue
-                task = ("F" if k == PL.FWD else "B", int(p.micro[t, j]), j)
-                assert task not in seen, task
-                seen.add(task)
-                assert p.stash_slot[t, j] >= 0
-        assert len(seen) == 2 * m * n, name
-        # inbox slot pairing: each recv is read later (or same tick)
-        for arr, rd in ((p.f_recv_slot, p.f_read_slot),
-                        (p.b_recv_slot, p.b_read_slot)):
-            for j in range(n):
-                pending = {}
-                for t in range(p.n_ticks):
-                    if arr[t, j] >= 0:
-                        assert arr[t, j] not in pending, "slot overwritten"
-                        pending[int(arr[t, j])] = t
-                    if rd[t, j] >= 0:
-                        assert int(rd[t, j]) in pending, "read before arrival"
-                        del pending[int(rd[t, j])]
-                assert not pending, "arrival never consumed"
+            if p.kind[t, j] in (PL.BWD_X, PL.BWD_W):
+                by_micro.setdefault(int(p.micro[t, j]), []).append(
+                    (int(p.kind[t, j]), int(p.park_read[t, j]),
+                     int(p.b_read[t, j])))
+        for i, evs in by_micro.items():
+            assert len(evs) == 2, (j, i)
+            (kx, px, bx), (kw, pw, bw) = sorted(evs)
+            assert (kx, kw) == (PL.BWD_X, PL.BWD_W)
+            assert px == pw and bx == bw, (j, i)
+    # the fill: zb has strictly fewer idle slots than 1f1b
+    assert (p.kind == PL.NOP).sum() / p.kind.size \
+        < (f1b.kind == PL.NOP).sum() / f1b.kind.size
+
+
+def test_plan_interleaved_chunks():
+    """Interleaved lowering: rank r hosts chunks {r, r+n, ...}; the chunk
+    column selects them; per-rank park covers both chunks' arrivals."""
+    m, n, v = 8, 4, 2
+    p = PL.plan_for("interleaved:2", m, n)
+    assert p.n_chunks == v and p.n_stages == n * v
+    for t in range(p.n_ticks):
+        for j in range(n):
+            if p.kind[t, j] != PL.NOP:
+                assert 0 <= p.chunk[t, j] < v
+    # every global stage s executes on rank s % n with chunk s // n
+    stages_seen = set()
+    for t in range(p.n_ticks):
+        for j in range(n):
+            if p.kind[t, j] == PL.FWD:
+                stages_seen.add(int(p.chunk[t, j]) * n + j)
+    assert stages_seen == set(range(n * v))
+    table = S.interleaved_1f1b_schedule(m, n, v)
+    assert list(p.per_stage_stash) == S.peak_stash(table, n * v, ranks=n)
+
+
+def test_plan_segments_and_compaction():
+    """Segments partition the tick axis, each declaring exactly the branch
+    set its ticks use; all-rank-NOP ticks are dropped at lowering."""
+    for schedule, m, n in [("gpipe_tasked", 8, 4), ("1f1b", 8, 4),
+                           ("zb", 8, 4), ("interleaved:2", 8, 4)]:
+        p = PL.plan_for(schedule, m, n)
+        assert len(p.segments) <= PL.MAX_SEGMENTS
+        assert p.segments[0].start == 0 and p.segments[-1].stop == p.n_ticks
+        for a, b in zip(p.segments, p.segments[1:]):
+            assert a.stop == b.start
+        for seg in p.segments:
+            used = set(int(k) for k in p.kind[seg.start:seg.stop].ravel())
+            assert used <= set(seg.kinds), (schedule, seg)
+        # no tick is empty (compaction) — some rank works every tick
+        assert ((p.kind != PL.NOP).sum(axis=1) > 0).all(), schedule
+    # GPipe's fill is a pure-F phase: its first segment has no B branches
+    g = PL.plan_for("gpipe_tasked", 8, 4)
+    assert not (set(g.segments[0].kinds)
+                & {PL.BWD, PL.BWD_X, PL.BWD_W})
 
 
 def test_forward_plan_is_clock_cycle():
@@ -88,7 +181,27 @@ def test_forward_plan_is_clock_cycle():
             else:
                 assert p.kind[t, j] == PL.NOP
     # no backward machinery in a forward-only plan
-    assert (p.stash_slot == -1).all() and (p.b_read_slot == -1).all()
+    assert (p.b_read == -1).all() and (p.b_recv == -1).all()
+
+
+def test_device_model_schedule_payoff():
+    """The dedicated-device critical path (the schedule-comparison clock)
+    shows the new schedules' payoff: interleaving strictly undercuts 1F1B
+    at every grid point; split backward wins exactly where the 1F1B bubble
+    outweighs its extra recompute (m close to n)."""
+    cases = [(4, 4), (8, 4), (8, 2)]
+    for m, n in cases:
+        t_f, _ = S.simulate_device_times(S.one_f_one_b_schedule(m, n), n)
+        t_g, _ = S.simulate_device_times(
+            S.gpipe_schedule(m, n, checkpoint=False), n)
+        assert t_f == pytest.approx(t_g)   # same critical path (flush)
+        t_i, _ = S.simulate_device_times(
+            S.interleaved_1f1b_schedule(m, n, 2),
+            n, S.default_task_cost(2 * n, n))
+        assert t_i < t_f, (m, n)
+    t_zb, _ = S.simulate_device_times(S.zb_schedule(4, 4), 4)
+    t_f, _ = S.simulate_device_times(S.one_f_one_b_schedule(4, 4), 4)
+    assert t_zb < t_f                      # high-bubble regime: zb pays off
 
 
 # ---------------------------------------------------------------------------
@@ -137,9 +250,8 @@ def loss_and_grads(schedule, pipe, m, data):
             loss_fn=lambda hp, c, la: model.head_loss(hp, c["h"],
                                                       la["labels"]),
             carry_proto=cp)
-        # structural memory bound: the stash buffer depth is decided by the
+        # structural memory bound: the park buffer depth is decided by the
         # plan, before any tracing
-        import repro.core.schedules as S
         expect = ([min(pipe - j, m) for j in range(pipe)]
                   if schedule == "1f1b" else [m] * pipe)
         assert list(tplan.per_stage_stash) == expect, tplan.per_stage_stash
@@ -191,34 +303,38 @@ from repro.models.lm import LMModel
 from repro.optim import optimizers as optim
 
 arch = configs.smoke_arch("smollm-360m")
-pcfg = ParallelConfig(pipe=4, tp=1, data=2, pod=1, n_micro=4,
-                      schedule="1f1b")
-mesh = mesh_lib.make_smoke_mesh(pcfg)
-model = LMModel(arch, pcfg, dtype=jnp.float32)
-shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
-params = model.init(jax.random.PRNGKey(0))
-ocfg = optim.OptimizerConfig(lr=2e-3, warmup_steps=2, total_steps=20)
-opt = optim.init(ocfg, params)
-with set_mesh(mesh):
-    step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape, ocfg))
-    batch = {k: jax.random.randint(jax.random.PRNGKey(1), v.shape, 0,
-                                   arch.vocab)
-             for k, v in model.input_specs(shape).items()}
-    losses = []
-    for _ in range(6):
-        params, opt, metrics = step(params, opt, batch)
-        losses.append(float(metrics["loss"]))
-assert all(np.isfinite(losses)), losses
-assert losses[-1] < losses[0] * 0.9, losses
-print("1F1B TRAIN OK", losses[0], "->", losses[-1])
+for schedule in ("1f1b", "zb", "interleaved:2"):
+    pcfg = ParallelConfig(pipe=4, tp=1, data=2, pod=1, n_micro=4,
+                          schedule=schedule)
+    mesh = mesh_lib.make_smoke_mesh(pcfg)
+    model = LMModel(arch, pcfg, dtype=jnp.float32)
+    shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = optim.OptimizerConfig(lr=2e-3, warmup_steps=2, total_steps=20)
+    opt = optim.init(ocfg, params)
+    with set_mesh(mesh):
+        step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape,
+                                              ocfg))
+        batch = {k: jax.random.randint(jax.random.PRNGKey(1), v.shape, 0,
+                                       arch.vocab)
+                 for k, v in model.input_specs(shape).items()}
+        losses = []
+        for _ in range(6):
+            params, opt, metrics = step(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses)), (schedule, losses)
+    assert losses[-1] < losses[0] * 0.9, (schedule, losses)
+    print("TRAIN OK", schedule, losses[0], "->", losses[-1])
+print("ALL TRAIN OK")
 """
 
 
-def test_1f1b_train_loop_converges():
-    """End-to-end: schedule="1f1b" through build_train_step memorizes a
-    fixed batch on an 8-device mesh (pipeline + DP + AdamW)."""
-    out = run_subprocess(TRAIN_1F1B, n_devices=8, timeout=900)
-    assert "1F1B TRAIN OK" in out
+def test_fused_train_loops_converge():
+    """End-to-end: schedule="1f1b" / "zb" / "interleaved:2" through
+    build_train_step memorize a fixed batch on an 8-device mesh
+    (pipeline + DP + AdamW)."""
+    out = run_subprocess(TRAIN_1F1B, n_devices=8, timeout=1500)
+    assert "ALL TRAIN OK" in out
 
 
 UNIFIED_EXTRAS = """
@@ -237,7 +353,7 @@ from repro.core.pipeline import (pipeline_call, pipeline_grad_call,
 
 key = jax.random.PRNGKey(0)
 
-# --- 1. skip-connection model: fused 1F1B == legacy-lowered GPipe --------
+# --- 1. skip-connection model: all fused schedules vs legacy GPipe -------
 arch = configs.smoke_arch("whisper-tiny")
 shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
 
@@ -292,13 +408,21 @@ def whisper_lg(schedule, pipe, m, stream=False):
         loss, grads = fused(params, batch)
         return np.asarray(loss), jax.tree.map(np.asarray, grads)
 
+def assert_bitwise(ga, gb, tag):
+    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(ga)[0],
+                            jax.tree_util.tree_leaves(gb)):
+        assert np.array_equal(a, b), (tag, path)
+
 for pipe, m in [(2, 4), (4, 4)]:
     l_t, g_t = whisper_lg("gpipe_tasked", pipe, m)
     l_f, g_f = whisper_lg("1f1b", pipe, m)
+    l_z, g_z = whisper_lg("zb", pipe, m)
     assert np.array_equal(l_t, l_f), (pipe, m, l_t, l_f)
-    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g_t)[0],
-                            jax.tree_util.tree_leaves(g_f)):
-        assert np.array_equal(a, b), (pipe, m, path)
+    assert np.array_equal(l_t, l_z), (pipe, m, l_t, l_z)
+    assert_bitwise(g_t, g_f, ("1f1b", pipe, m))
+    # split backward through skip portals: Bx ships the skip cotangents on
+    # the critical path, Bw re-seeds the weight VJP — still bitwise
+    assert_bitwise(g_t, g_z, ("zb", pipe, m))
     l_r, g_r = whisper_lg("gpipe", pipe, m)
     np.testing.assert_allclose(l_t, l_r, rtol=2e-5)
     for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g_r)[0],
@@ -307,13 +431,25 @@ for pipe, m in [(2, 4), (4, 4)]:
                                    err_msg=f"{(pipe, m)} {path}")
     print("skip-model grid point OK", pipe, m)
 
+# --- 1b. interleaved: same GLOBAL stage split on half the ranks is the
+# SAME computation bitwise: interleaved:2 @ pipe=2 == 1f1b @ pipe=4
+# (both cut whisper into 4 global stages; the portal whose src and dst
+# land on one rank becomes an identity hold).
+l4, g4 = whisper_lg("1f1b", 4, 8)
+li, gi = whisper_lg("interleaved:2", 2, 8)
+assert np.array_equal(l4, li), (l4, li)
+assert_bitwise(g4, gi, "interleaved-vs-1f1b")
+print("interleaved bitwise OK")
+
 # --- 2. streamed inputs through the fused executor: bitwise --------------
 l0, g0 = whisper_lg("1f1b", 4, 8, stream=False)
 l1, g1 = whisper_lg("1f1b", 4, 8, stream=True)
 assert np.array_equal(l0, l1), (l0, l1)
-for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(g0)[0],
-                        jax.tree_util.tree_leaves(g1)):
-    assert np.array_equal(a, b), path
+assert_bitwise(g0, g1, "streamed-1f1b")
+lz1, gz1 = whisper_lg("zb", 4, 8, stream=True)
+lz0, gz0 = whisper_lg("zb", 4, 8, stream=False)
+assert np.array_equal(lz0, lz1)
+assert_bitwise(gz0, gz1, "streamed-zb")
 print("streamed fused OK")
 
 # --- 3. resident state threaded through an F+B step ----------------------
@@ -377,10 +513,13 @@ print("UNIFIED EXTRAS OK")
 
 def test_unified_executor_skips_streaming_resident():
     """The tentpole's acceptance surface: (1) a skip-connection model runs
-    the fused F+B schedules with bitwise-identical grads between the
-    legacy-lowered GPipe table and 1F1B (and matches the autodiff
-    reference); (2) ``stream_inputs`` lowers to plan injection ticks and is
-    bitwise vs replicated inputs; (3) resident state threads through an
-    F+B step without perturbing gradients."""
-    out = run_subprocess(UNIFIED_EXTRAS, n_devices=8, timeout=1800)
+    ALL fused F+B schedules (gpipe_tasked / 1f1b / zb) with
+    bitwise-identical losses and grads, matching the autodiff reference to
+    tolerance; (2) interleaved:2 on half the ranks is bitwise-identical to
+    1f1b on the full rank count (same global stage split — the same
+    computation, reordered); (3) ``stream_inputs`` lowers to plan injection
+    ticks and is bitwise vs replicated inputs for both fused and
+    split-backward schedules; (4) resident state threads through an F+B
+    step without perturbing gradients."""
+    out = run_subprocess(UNIFIED_EXTRAS, n_devices=8, timeout=2400)
     assert "UNIFIED EXTRAS OK" in out

@@ -1,11 +1,19 @@
 """Schedule properties: Algorithm 1 (deterministic clock-cycle), GPipe
-forward+backward ordering, 1F1B, bubble fractions, stash bounds."""
+forward+backward ordering, 1F1B, interleaved virtual stages, split-backward
+(zero-bubble), bubble fractions, stash bounds."""
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import schedules as S
+from repro.core.schedules import Task
 
 mn = st.tuples(st.integers(1, 24), st.integers(1, 12))
+# interleaved needs m % n == 0: draw (waves, n, v) and build m = waves * n
+wnv = st.tuples(st.integers(1, 4), st.integers(1, 6), st.integers(2, 3))
+
+
+def ticks_of(table):
+    return {t: k for k, tick in enumerate(table) for t in tick}
 
 
 @given(mn)
@@ -50,12 +58,146 @@ def test_1f1b_stash_bound(m_n):
     """1F1B bounds live activations per stage by min(n - j, m); GPipe
     stashes the full m on every stage — the paper's memory motivation."""
     m, n = m_n
-    peak_1f1b = S.peak_stash(S.one_f_one_b_schedule(m, n), n, m)
-    peak_gpipe = S.peak_stash(S.gpipe_schedule(m, n, checkpoint=False), n, m)
+    peak_1f1b = S.peak_stash(S.one_f_one_b_schedule(m, n), n)
+    peak_gpipe = S.peak_stash(S.gpipe_schedule(m, n, checkpoint=False), n)
     for j in range(n):
         assert peak_1f1b[j] <= min(n - j, m)
         assert peak_gpipe[j] == m
         assert peak_1f1b[j] <= peak_gpipe[j]
+
+
+# ---------------------------------------------------------------------------
+# Interleaved virtual stages
+# ---------------------------------------------------------------------------
+
+@given(wnv)
+@settings(max_examples=40, deadline=None)
+def test_interleaved_valid_and_ordered(wnv_):
+    """Every (i, global stage) F precedes its B; the table covers all
+    m * n * v tasks; one task per RANK per tick (chunks share a rank)."""
+    w, n, v = wnv_
+    m = w * n
+    table = S.interleaved_1f1b_schedule(m, n, v)
+    S.validate(table, m, n * v, ranks=n, backward_micro_order=False)
+    seen = ticks_of(table)
+    for i in range(m):
+        for s in range(n * v):
+            assert seen[Task("F", i, s)] < seen[Task("B", i, s)]
+
+
+@given(wnv)
+@settings(max_examples=30, deadline=None)
+def test_interleaved_stash_and_bubble(wnv_):
+    """Per-rank peak stash is bounded by m*v, and the bubble fraction does
+    not exceed plain 1F1B's on the same (m, n) — the interleaving payoff."""
+    w, n, v = wnv_
+    m = w * n
+    table = S.interleaved_1f1b_schedule(m, n, v)
+    peak = S.peak_stash(table, n * v, ranks=n)
+    assert all(p <= m * v for p in peak)
+    b_il = S.bubble_fraction(table, ranks=n)
+    b_1f = S.bubble_fraction(S.one_f_one_b_schedule(m, n))
+    assert b_il <= b_1f + 1e-9
+    if n > 1 and v > 1:
+        assert b_il < b_1f    # strictly fewer idle slots
+
+
+def test_interleaved_degenerates_and_rejects():
+    assert S.interleaved_1f1b_schedule(8, 4, 1) \
+        == S.one_f_one_b_schedule(8, 4)
+    with pytest.raises(ValueError):
+        S.interleaved_1f1b_schedule(6, 4, 2)     # m % n != 0
+    with pytest.raises(ValueError):
+        S.interleaved_1f1b_schedule(8, 4, 0)
+
+
+# ---------------------------------------------------------------------------
+# Split backward (zero-bubble)
+# ---------------------------------------------------------------------------
+
+@given(mn)
+@settings(max_examples=40, deadline=None)
+def test_zb_valid_and_bw_after_bx(m_n):
+    """Bx inherits B's chain; Bw(i,j) never precedes its Bx(i,j); every
+    F/Bx/Bw appears exactly once."""
+    m, n = m_n
+    table = S.zb_schedule(m, n)
+    S.validate(table, m, n, backward_micro_order=False)
+    seen = ticks_of(table)
+    for i in range(m):
+        for j in range(n):
+            assert seen[Task("F", i, j)] < seen[Task("Bx", i, j)]
+            assert seen[Task("Bx", i, j)] < seen[Task("Bw", i, j)]
+    assert len(seen) == 3 * m * n
+
+
+@given(mn)
+@settings(max_examples=30, deadline=None)
+def test_zb_fills_bubbles(m_n):
+    """The Bw fill gives zb a bubble fraction <= 1F1B's (strictly smaller
+    whenever 1F1B has a bubble at all and there is real pipelining)."""
+    m, n = m_n
+    b_zb = S.bubble_fraction(S.zb_schedule(m, n))
+    b_1f = S.bubble_fraction(S.one_f_one_b_schedule(m, n))
+    assert b_zb <= b_1f + 1e-9
+    if n > 1 and m >= n:
+        assert b_zb < b_1f
+
+
+@given(mn)
+@settings(max_examples=30, deadline=None)
+def test_zb_stash_freed_at_bw(m_n):
+    """Split backward holds the activation until Bw (the weight grad still
+    needs the stage input after Bx) — the bound stays 1F1B-shaped + the
+    Bx->Bw gap, never exceeding m."""
+    m, n = m_n
+    peak = S.peak_stash(S.zb_schedule(m, n), n)
+    for j in range(n):
+        assert peak[j] <= m
+
+
+# ---------------------------------------------------------------------------
+# Bubble fraction (table-driven) + validate rejections
+# ---------------------------------------------------------------------------
+
+def test_bubble_fraction_from_table():
+    """bubble_fraction counts idle slots in the actual table: GPipe's
+    matches the paper's closed form, 1F1B matches GPipe (same tick count),
+    and the new schedules undercut both."""
+    for m, n in [(4, 3), (8, 4), (32, 8), (1, 1)]:
+        g = S.bubble_fraction(S.gpipe_schedule(m, n, checkpoint=False))
+        assert g == pytest.approx(S.ideal_bubble_fraction(m, n))
+        f = S.bubble_fraction(S.one_f_one_b_schedule(m, n))
+        assert f == pytest.approx(g)
+    assert S.ideal_bubble_fraction(1, 1) == 0.0
+    assert S.ideal_bubble_fraction(4, 3) == pytest.approx(2 / 6)
+    # GPipe guidance: m >= 4n keeps bubble under 20%
+    assert S.ideal_bubble_fraction(4 * 8, 8) < 0.2
+    # interleaving / Bw-filling shrink the bubble at fixed (m, n)
+    f = S.bubble_fraction(S.one_f_one_b_schedule(8, 4))
+    assert S.bubble_fraction(S.interleaved_1f1b_schedule(8, 4, 2),
+                             ranks=4) < f
+    assert S.bubble_fraction(S.zb_schedule(8, 4)) < f
+
+
+def test_validate_rejects_malformed_tables():
+    m, n, v = 4, 2, 2
+    ok = S.interleaved_1f1b_schedule(m, n, v)
+    # drop one backward task
+    broken = [[t for t in tick if t != Task("B", 0, 1)] for tick in ok]
+    with pytest.raises(AssertionError):
+        S.validate(broken, m, n * v, ranks=n, backward_micro_order=False)
+    # two tasks for one rank in one tick (chunks collide)
+    broken = [list(tick) for tick in ok]
+    broken[0].append(Task("F", 0, 2))     # stage 2 = rank 0 chunk 1
+    with pytest.raises(AssertionError):
+        S.validate(broken, m, n * v, ranks=n, backward_micro_order=False)
+    # F after its B
+    zb = S.zb_schedule(4, 2)
+    flip = [[Task("Bw", 0, 0)]] + [
+        [t for t in tick if t != Task("Bw", 0, 0)] for tick in zb]
+    with pytest.raises(AssertionError):
+        S.validate(flip, 4, 2, backward_micro_order=False)
 
 
 def test_last_microbatch_recompute_elided():
@@ -70,13 +212,6 @@ def test_last_microbatch_recompute_elided():
                               recompute_last_micro=True)
     recs1 = [t for tick in table1 for t in tick if t.kind == "R"]
     assert len(recs1) == n
-
-
-def test_bubble_fraction():
-    assert S.bubble_fraction(1, 1) == 0.0
-    assert S.bubble_fraction(4, 3) == pytest.approx(2 / 6)
-    # GPipe guidance: m >= 4n keeps bubble under 20%
-    assert S.bubble_fraction(4 * 8, 8) < 0.2
 
 
 @given(mn)
