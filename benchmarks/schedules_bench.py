@@ -1,11 +1,15 @@
 """Schedule A/B benchmark: GPipe vs 1F1B vs interleaved vs zero-bubble.
 
 Runs the fused scheduler (``gpipe_tasked`` / ``1f1b`` / ``interleaved:2`` /
-``zb``) and the legacy-semantics autodiff path (``gpipe``, the forward-only
-plan through the same executor) on real multi-device pipelines (XLA host
-devices, reduced model — CPU is the runtime, TPU the target) and emits a
-machine-readable ``BENCH_schedules.json`` so the perf trajectory has a
-baseline.  Per row:
+``zb`` / ``zb-reuse``) and the legacy-semantics autodiff path (``gpipe``,
+the forward-only plan through the same executor) on real multi-device
+pipelines (XLA host devices, reduced model — CPU is the runtime, TPU the
+target) and emits a machine-readable ``BENCH_schedules.json`` so the perf
+trajectory has a baseline.  ``zb-reuse`` is ``schedule="zb"`` with
+``residuals="reuse"`` + ``remat="dots"`` (true ZB-H1: Bx stashes the
+matmul outputs its remat materialized, Bw re-reads them instead of
+recomputing — Bw is priced at 1 forward instead of 2), A/B'd against
+recompute-mode ``zb`` with its residual-stash bytes reported.  Per row:
 
 * ``us_per_step`` — measured wall-clock per train step.  This container
   timeshares every "device" over the same host cores, so wall-clock tracks
@@ -71,27 +75,45 @@ shape = ShapeConfig("t", seq_len={seq}, global_batch={batch}, kind="train")
 key = jax.random.PRNGKey(0)
 rows = []
 
-FUSED = ("gpipe_tasked", "1f1b", "interleaved:2", "zb")
+FUSED = ("gpipe_tasked", "1f1b", "interleaved:2", "zb", "zb-reuse")
 SCHEDULES = FUSED if SMOKE else ("gpipe",) + FUSED
 
-def stash_report(schedule, pipe, m, carry_bytes):
-    if schedule == "gpipe":
+def variant(name):
+    # bench row name -> (schedule, residuals, remat).  zb-reuse pairs the
+    # dots policy with residual reuse: the stash holds matmul outputs and
+    # Bw recomputes only elementwise ops (bitwise vs recompute-zb).
+    if name == "zb-reuse":
+        return "zb", "reuse", "dots"
+    return name, "recompute", "full"
+
+def stash_report(name, pipe, m, carry_bytes, resid_info=None):
+    if name == "gpipe":
         # autodiff keeps every micro's boundary input alive as a residual
         return dict(park_depth=m, per_stage_stash=[m] * pipe,
                     stash_bound=[m] * pipe,
                     per_stage_activation_bytes=[m * carry_bytes] * pipe,
-                    carry_bytes_per_micro=carry_bytes)
-    tplan = plan_lib.plan_for(schedule, m, pipe)
+                    carry_bytes_per_micro=carry_bytes, residuals="autodiff")
+    schedule, residuals, _ = variant(name)
+    tplan = plan_lib.plan_for(schedule, m, pipe, residuals=residuals)
+    bps = (resid_info or {{}}).get("resid_bytes_per_slot", 0)
     return dict(park_depth=tplan.park_depth,
                 per_stage_stash=list(tplan.per_stage_park),
                 stash_bound=list(tplan.per_stage_stash),
                 per_stage_activation_bytes=[d * carry_bytes
                                             for d in tplan.per_stage_park],
-                carry_bytes_per_micro=carry_bytes)
+                carry_bytes_per_micro=carry_bytes,
+                residuals=tplan.residuals,
+                resid_slots=list(tplan.per_stage_resid),
+                resid_depth=tplan.resid_depth,
+                residual_bytes_per_slot=bps,
+                residual_stash_bytes=[s * bps
+                                      for s in tplan.per_stage_resid])
 
-def schedule_model(schedule, pipe, m, unit_us):
+def schedule_model(name, pipe, m, unit_us):
+    schedule, residuals, remat = variant(name)
     table, n_stages, ranks = plan_lib.schedule_table(schedule, m, pipe)
-    cost = S.default_task_cost(n_stages, ranks)
+    cost = S.default_task_cost(n_stages, ranks, residuals=residuals,
+                               remat=remat)
     t_end, busy = S.simulate_device_times(table, ranks, cost)
     return dict(
         bubble_fraction_theoretical=round(S.bubble_fraction(table,
@@ -112,9 +134,11 @@ def time_step(step, *args):
         best = min(best, time.perf_counter() - t0)   # min: noise-robust
     return best, out
 
-def lm_build(schedule, pipe, m):
+def lm_build(name, pipe, m):
+    schedule, residuals, remat = variant(name)
     pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
-                          remat="full", schedule=schedule)
+                          remat=remat, schedule=schedule,
+                          residuals=residuals)
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
     params = model.init(key)
@@ -122,15 +146,16 @@ def lm_build(schedule, pipe, m):
     opt = optim.init(ocfg, params)
     batch = {{k: jax.random.randint(key, v.shape, 0, arch.vocab)
              for k, v in model.input_specs(shape).items()}}
+    resid_info = {{}}
     with set_mesh(mesh):
         step = jax.jit(steps.build_train_step(model, pcfg, mesh, shape,
-                                              ocfg))
+                                              ocfg, resid_info=resid_info))
         out = step(params, opt, batch)       # compile + warm
         jax.block_until_ready(jax.tree.leaves(out)[0])
-    return step, params, opt, batch, mesh, float(out[2]["loss"])
+    return step, params, opt, batch, mesh, float(out[2]["loss"]), resid_info
 
-def lm_step_time(schedule, pipe, m):
-    step, params, opt, batch, mesh, loss = lm_build(schedule, pipe, m)
+def lm_step_time(name, pipe, m):
+    step, params, opt, batch, mesh, loss, _ = lm_build(name, pipe, m)
     with set_mesh(mesh):
         dt, _ = time_step(step, params, opt, batch)
     return dt, loss
@@ -149,23 +174,24 @@ for pipe, m in {grid}:
     rounds = 2 if SMOKE else 4
     for _ in range(rounds):
         for s in SCHEDULES:
-            step, params, opt, batch, mesh, _ = built[s]
+            step, params, opt, batch, mesh = built[s][:5]
             with set_mesh(mesh):
                 dt, _ = time_step(step, params, opt, batch)
             walls[s] = min(walls[s], dt)
     base_model_us = None
-    for schedule in SCHEDULES:
+    for name in SCHEDULES:
         mbg = shape.global_batch // m
         carry_bytes = mbg * shape.seq_len * arch.d_model * 4  # f32 boundary
-        model_cols = schedule_model(schedule, pipe, m, unit_us)
-        if schedule == "gpipe_tasked":
+        model_cols = schedule_model(name, pipe, m, unit_us)
+        if name == "gpipe_tasked":
             base_model_us = model_cols["us_per_step_device_model"]
         rows.append(dict(
-            model="lm", schedule=schedule, pipe=pipe, n_micro=m,
-            us_per_step=round(walls[schedule] * 1e6, 1),
+            model="lm", schedule=name, pipe=pipe, n_micro=m,
+            us_per_step=round(walls[name] * 1e6, 1),
             us_per_step_sequential=round(t_seq * 1e6, 1),
-            loss=built[schedule][5], **model_cols,
-            **stash_report(schedule, pipe, m, carry_bytes)))
+            loss=built[name][5], **model_cols,
+            **stash_report(name, pipe, m, carry_bytes,
+                           resid_info=built[name][6])))
     del built
     for r in rows:
         if r["model"] == "lm" and r["pipe"] == pipe and r["n_micro"] == m:
@@ -179,27 +205,31 @@ if not SMOKE:
     x = jax.random.normal(jax.random.PRNGKey(1), (UB, ucfg.img, ucfg.img, 3))
     for pipe, m in [(4, 4)]:
         losses = {{}}
-        for schedule in FUSED:
+        for name in FUSED:
+            schedule, residuals, remat = variant(name)
             pcfg = ParallelConfig(pipe=pipe, tp=1, data=2, pod=1, n_micro=m,
-                                  portals=True, remat="full",
-                                  schedule=schedule)
+                                  portals=True, remat=remat,
+                                  schedule=schedule, residuals=residuals)
             mesh = mesh_lib.make_smoke_mesh(pcfg)
             umodel = UNetModel(ucfg, pipe * pcfg.virtual_stages)
             uparams = umodel.init(jax.random.PRNGKey(0))
             prog = PH.build_hetero_program(umodel, uparams, UB // m, pcfg,
                                            x[:2])
             carry_bytes = (UB // m) * prog.carry_proto["buf"].shape[1] * 4
+            resid_info = {{}}
             with set_mesh(mesh):
                 tgt = jnp.zeros((UB,) + tuple(prog.out_proto.shape[1:]),
                                 jnp.float32)
-                call = jax.jit(PH.hetero_grad_call(prog, mesh, pcfg))
+                call = jax.jit(PH.hetero_grad_call(prog, mesh, pcfg,
+                                                   resid_info=resid_info))
                 dt, (loss, _) = time_step(call, prog.stacked_params, x, tgt)
-            losses[schedule] = float(loss)
+            losses[name] = float(loss)
             rows.append(dict(
-                model="unet-portal", schedule=schedule, pipe=pipe, n_micro=m,
+                model="unet-portal", schedule=name, pipe=pipe, n_micro=m,
                 n_skip_edges=len(prog.skips),
                 us_per_step=round(dt * 1e6, 1), loss=float(loss),
-                **stash_report(schedule, pipe, m, carry_bytes)))
+                **stash_report(name, pipe, m, carry_bytes,
+                               resid_info=resid_info)))
         # the unified runtime's contract: schedules are the same computation
         assert len(set(losses.values())) == 1, losses
 
@@ -242,7 +272,7 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
                                         for j in range(pipe)]
             assert sum(r["per_stage_activation_bytes"]) \
                 <= sum(g["per_stage_activation_bytes"])
-        if smoke and s in ("1f1b", "interleaved:2", "zb"):
+        if smoke and s in ("1f1b", "interleaved:2", "zb", "zb-reuse"):
             # CI tripwire: fused-executor overhead must stay bounded.  At
             # the smoke shape compute is negligible, so interleaved pays
             # its v-fold branch-dispatch overhead in full — it gets a
@@ -251,8 +281,22 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
             assert r["us_per_step"] <= cap * g["us_per_step"], \
                 (s, r["us_per_step"], g["us_per_step"], cap)
 
+    # residual-reuse tripwire (smoke AND full): dropping Bw's recompute
+    # must shorten the zb dedicated-device step, and the reuse row must
+    # actually carry a residual stash.
+    for (model, pipe, m, s), r in by_key.items():
+        if s != "zb-reuse" or model != "lm":
+            continue
+        z = by_key[(model, pipe, m, "zb")]
+        assert r["us_per_step_device_model"] <= z["us_per_step_device_model"], \
+            (pipe, m, r["us_per_step_device_model"],
+             z["us_per_step_device_model"])
+        assert r["residuals"] == "reuse" and sum(r["resid_slots"]) > 0
+        assert sum(r["residual_stash_bytes"]) > 0, r["residual_bytes_per_slot"]
+
     if smoke:
-        print("# smoke OK (fused schedules within their overhead caps)")
+        print("# smoke OK (fused schedules within their overhead caps; "
+              "zb-reuse device model <= zb-recompute)")
         return rows
 
     # schedule-payoff acceptance: on dedicated devices, interleaving and/or
@@ -261,7 +305,7 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
         f = by_key.get(("lm", 4, m, "1f1b"))
         if f is None:
             continue
-        better = [s for s in ("interleaved:2", "zb")
+        better = [s for s in ("interleaved:2", "zb", "zb-reuse")
                   if ("lm", 4, m, s) in by_key
                   and by_key[("lm", 4, m, s)]["us_per_step_device_model"]
                   < f["us_per_step_device_model"]]

@@ -143,6 +143,17 @@ SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
 # Parallel / schedule config
 # ---------------------------------------------------------------------------
 
+#: canonical rematerialization policies (mirrored as
+#: ``repro.core.checkpointing.POLICIES`` — defined here so the config layer
+#: can validate at parse time without importing jax).
+REMAT_POLICIES = ("none", "full", "dots", "dots_no_batch")
+
+#: split-backward residual handling (ZB-H1): ``"recompute"`` re-runs the
+#: stage forward inside both Bx and Bw; ``"reuse"`` stashes the residuals Bx
+#: materialized and re-reads them at Bw (no second remat).
+RESIDUAL_MODES = ("recompute", "reuse")
+
+
 def parse_schedule(schedule: str) -> Tuple[str, int]:
     """Split a schedule string into (base, virtual_stages).
 
@@ -191,7 +202,21 @@ class ParallelConfig:
     #               param memory for the slots);
     #   "running" — fold in schedule order: O(1) memory, bit-exact only
     #               against itself.
-    remat: str = "full"           # none | full | dots
+    remat: str = "full"           # none | full | dots | dots_no_batch
+    #   (checkpointing.POLICIES): what each stage saves for its backward.
+    #   "full" stores only the stage boundary input (the paper's §3.2.4
+    #   setting); "dots" / "dots_no_batch" store matmul outputs; "none"
+    #   stores whatever the vjp naturally needs.  Under residuals="reuse"
+    #   the policy also decides WHAT Bx stashes for Bw (see ``residuals``).
+    residuals: str = "recompute"  # split-backward (zb) residual handling:
+    #   "recompute" — Bx and Bw each rematerialize the stage forward from
+    #               the parked boundary input (2 forwards of remat per
+    #               micro — the ZB tradeoff PR 3 priced);
+    #   "reuse"   — true ZB-H1: Bx stashes the vjp residuals its remat
+    #               materialized (filtered by the remat policy) into a
+    #               plan-allocated residual stash, and Bw re-reads them
+    #               instead of re-running the forward (Bw ~ 1 forward of
+    #               work instead of 2).  No effect on fused-B schedules.
     remat_layers: bool = False    # nested checkpointing: remat each layer
     #   inside the stage as well, so a backward tick stashes only bf16
     #   layer-boundary activations instead of every layer's fp32 internals
@@ -208,6 +233,18 @@ class ParallelConfig:
     fsdp: bool = True             # ZeRO-3 over the data axis
     grad_compression: str = "none"  # none | int8_ef (cross-pod)
     activation_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        # Validate knob values at parse time: a typo'd policy should fail
+        # when the config is built, not ticks deep inside wrap_stage / the
+        # fused executor's backward branches.
+        if self.remat not in REMAT_POLICIES:
+            raise ValueError(f"unknown remat policy {self.remat!r}; "
+                             f"want one of {REMAT_POLICIES}")
+        if self.residuals not in RESIDUAL_MODES:
+            raise ValueError(f"unknown residuals mode {self.residuals!r}; "
+                             f"want one of {RESIDUAL_MODES}")
+        parse_schedule(self.schedule)   # rejects malformed "interleaved:v"
 
     def with_(self, **kw) -> "ParallelConfig":
         return dataclasses.replace(self, **kw)

@@ -16,6 +16,16 @@ Policies:
   * ``dots`` — store matmul outputs only (jax checkpoint_dots) — beyond-paper
     middle ground.
   * ``dots_no_batch`` — checkpoint_dots_with_no_batch_dims (cheaper saves).
+
+Split-backward residual handling (``ParallelConfig.residuals``) crosses with
+the policy: under ``residuals="reuse"`` the fused executor stashes exactly
+the values the policy-wrapped vjp SAVES on the Bx tick and re-reads them on
+the Bw tick, so the policy decides the stash-size / Bw-recompute trade:
+``none`` stashes every residual the weight grad needs (Bw runs no forward at
+all), ``dots`` stashes matmul outputs (Bw recomputes only elementwise ops),
+and ``full`` degenerates to recompute semantics (the vjp saves only the
+boundary inputs, which are already parked — nothing to stash, Bw
+rematerializes inside the pullback).
 """
 from __future__ import annotations
 
@@ -23,8 +33,9 @@ from typing import Callable
 
 import jax
 
+from repro.configs.base import REMAT_POLICIES, RESIDUAL_MODES
 
-POLICIES = ("none", "full", "dots", "dots_no_batch")
+POLICIES = REMAT_POLICIES
 
 
 def wrap_stage(stage_fn: Callable, policy: str) -> Callable:
@@ -41,6 +52,24 @@ def wrap_stage(stage_fn: Callable, policy: str) -> Callable:
             stage_fn,
             policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
     raise ValueError(f"unknown remat policy {policy!r}; want one of {POLICIES}")
+
+
+def wrap_for_residuals(fn: Callable, policy: str, residuals: str) -> Callable:
+    """Wrap the function the fused executor vjp's on a backward tick.
+
+    ``residuals="recompute"`` leaves ``fn`` bare: the whole vjp lives inside
+    one tick, XLA's DCE prunes the unused cotangent half, and nothing
+    crosses ticks — the remat policy is irrelevant there.  With
+    ``residuals="reuse"`` the Bx tick's pullback leaves ARE the cross-tick
+    residual stash, so the policy-wrapped vjp decides what is stashed (see
+    module docstring).
+    """
+    if residuals not in RESIDUAL_MODES:
+        raise ValueError(f"unknown residuals mode {residuals!r}; "
+                         f"want one of {RESIDUAL_MODES}")
+    if residuals == "recompute":
+        return fn
+    return wrap_stage(fn, policy)
 
 
 def wrap_stage_for_micro(stage_fn: Callable, policy: str, *, micro: int,

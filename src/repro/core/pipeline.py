@@ -55,6 +55,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
@@ -217,6 +218,25 @@ def _buf(depth, proto):
         lambda c: jnp.zeros((depth,) + c.shape, c.dtype), proto)
 
 
+def _vjp_split(fn, args, also_live=()):
+    """vjp over all of ``args``, with the pullback flattened into leaves.
+
+    ``jax.vjp``'s pullback is a :class:`jax.tree_util.Partial` pytree whose
+    leaves are its residuals.  Leaves that are (by tracer identity) the
+    live inputs themselves — the primal args, or ``also_live`` values the
+    caller can rederive on a later tick (parked activations, labels of the
+    same micro, resident state) — need not cross ticks; everything else is
+    what the Bx tick must stash for residual reuse.  Returns
+    ``(out, vjp_fn, leaves, treedef, stash_mask)`` where ``stash_mask[i]``
+    is True for leaves that must be stashed.
+    """
+    out, vjp_fn = jax.vjp(fn, *args)
+    leaves, treedef = jax.tree_util.tree_flatten(vjp_fn)
+    live = set(map(id, jax.tree_util.tree_leaves((args, also_live))))
+    mask = tuple(id(leaf) not in live for leaf in leaves)
+    return out, vjp_fn, leaves, treedef, mask
+
+
 # ---------------------------------------------------------------------------
 # THE schedule executor — the repo's single tick loop
 # ---------------------------------------------------------------------------
@@ -235,7 +255,8 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                        carry_proto=None,
                        axis: str = PIPE_AXIS,
                        rank=None,
-                       loss_scale: float = 1.0):
+                       loss_scale: float = 1.0,
+                       resid_info: Optional[Dict[str, Any]] = None):
     """Execute one event plan (forward-only, or fused F+B) for a mini-batch.
 
     Forward-only plans (``tplan.has_backward == False``) return
@@ -250,6 +271,19 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     split plans run Bx (inputs only) on the critical path and Bw (weights
     only) in former bubble ticks, re-seeding the weight VJP from the
     still-parked output cotangent.
+
+    Split plans lowered with ``residuals="reuse"`` (true ZB-H1) change the
+    Bw story: the Bx tick vjp's the remat-policy-wrapped stage over ALL
+    arguments, ships the input cotangents, and *stashes* the pullback's
+    residual leaves (minus the ones rederivable from live state — parked
+    inputs, params, labels) into the plan-allocated residual slot; the Bw
+    tick rebuilds the pullback around the stashed leaves, so its local
+    forward recompute is dead code XLA eliminates — Bw costs one forward
+    of work (the weight-grad half) instead of two.  ``cfg.remat`` decides
+    what the pullback saves and hence what is stashed
+    (:mod:`repro.core.checkpointing`).  Pass a dict as ``resid_info`` to
+    receive the stash geometry (leaf shapes, bytes per slot) observed at
+    trace time.
 
     With interleaved plans (``tplan.n_chunks > 1``), ``stage_params``
     leaves carry a leading ``[n_chunks]`` axis — rank ``r`` holds global
@@ -363,6 +397,86 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     def zeros_skips():
         return {name: _zeros_of(skip_protos[name]) for name in skip_names}
 
+    # ---- residual reuse (ZB-H1): probe the stash geometry ----------------
+    reuse = fb and tplan.residuals == "reuse"
+    stash_mask: Tuple[bool, ...] = ()
+    stash_protos: list = []
+    if resid_info is not None and not reuse:
+        resid_info.update(residuals="recompute", resid_depth=0,
+                          per_stage_resid=[], resid_leaves=[],
+                          resid_bytes_per_slot=0)
+
+    def stage_core(p_all, c, si, fr, ph,
+                   micro_t, chunk_t, t, is_last_stage, resident_t, largs_t):
+        """THE stage+loss body every F+B tick runs — forward ticks, fused
+        backwards, and both split-backward halves differentiate exactly
+        this one definition (``apply_full`` and ``make_full_f`` are thin
+        adapters), so the reuse path can never drift from the forward."""
+        p = chunk_params(p_all, chunk_t)
+        gstage = chunk_t * R + idx if chunked else idx
+        ctx = TickCtx(stage=gstage, micro=micro_t,
+                      valid=jnp.asarray(True), t=t, fresh=fr,
+                      n_stages=tplan.n_stages, n_micro=m)
+        carry_out, skips_out, res_new = stage_apply(p, c, si, resident_t, ctx)
+        if not cfg.overlap:
+            (carry_out,), = (_barrier(carry_out),)
+        loss_i = jax.lax.cond(
+            is_last_stage,
+            lambda: loss_fn(ph, carry_out, largs_t).astype(jnp.float32),
+            lambda: jnp.zeros((), jnp.float32))
+        return carry_out, normalize_skips(skips_out), loss_i, res_new
+
+    def make_full_f(micro_t, chunk_t, t, is_last_stage, resident_t, largs_t):
+        """The function split-backward ticks differentiate: identical
+        structure for the Bx tick (input half + residual stash), the Bw
+        tick (weight half from stashed residuals), and the setup probe
+        below — all three traces must produce the same pullback leaf
+        list, which the in-branch ``stash_mask`` asserts.
+        """
+        def f(p_all, c, si, fr, ph):
+            carry_out, skips, loss_i, _ = stage_core(
+                p_all, c, si, fr, ph,
+                micro_t, chunk_t, t, is_last_stage, resident_t, largs_t)
+            return carry_out, skips, loss_i
+        return checkpointing.wrap_for_residuals(
+            f, cfg.remat, "reuse" if reuse else "recompute")
+
+    if reuse:
+        largs_proto = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(tuple(a.shape[1:]), a.dtype),
+            loss_args_mb)
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        bool_ = jax.ShapeDtypeStruct((), jnp.bool_)
+        probe_out = {}
+
+        def probe(p_all, c, si, fr, ph, res_t, la, mi, ch, tt, last):
+            f = make_full_f(mi, ch, tt, last, res_t, la)
+            _, _, leaves, _, mask = _vjp_split(
+                f, (p_all, c, si, fr, ph),
+                also_live=(res_t, la, mi, ch, tt, last, idx))
+            probe_out["mask"] = mask
+            return [l for l, keep in zip(leaves, mask) if keep]
+
+        stash_protos = list(jax.eval_shape(
+            probe, stage_params, carry0, zeros_skips(), fresh0, head_params,
+            resident, largs_proto, i32, i32, i32, bool_))
+        stash_mask = probe_out["mask"]
+        if resid_info is not None:
+            resid_info.update(
+                residuals="reuse", remat=cfg.remat,
+                resid_depth=tplan.resid_depth,
+                per_stage_resid=list(tplan.per_stage_resid),
+                resid_leaves=[(tuple(p.shape), str(jnp.dtype(p.dtype)))
+                              for p in stash_protos],
+                resid_bytes_per_slot=sum(
+                    int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+                    for p in stash_protos))
+        if stash_protos:
+            st["resid"] = [
+                jnp.zeros((max(tplan.resid_depth, 1),) + tuple(p.shape),
+                          jnp.dtype(p.dtype)) for p in stash_protos]
+    has_stash = bool(stash_protos)
+
     # ---- per-segment scan bodies -----------------------------------------
     def make_segment(seg: plan_lib.Segment):
         sl = slice(seg.start, seg.stop)
@@ -376,6 +490,10 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         need_brecv = fb and bool((tplan.b_recv[sl] >= 0).any())
         need_rot = streaming and bool(tplan.stream_rot[sl].any())
         need_x = bool((tplan.park_read[sl] >= 0).any())
+        has_rx = reuse and has_stash and BWD_X in kinds
+        need_rw = has_rx and bool((tplan.resid_write[sl] >= 0).any())
+        need_rd = reuse and has_stash \
+            and bool((tplan.resid_read[sl] >= 0).any())
 
         # branch-index remap: plan kind id -> position in this segment's set
         remap = {k: i for i, k in enumerate(kinds)}
@@ -396,6 +514,10 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             xs["brd"] = jnp.asarray(tplan.b_read[sl])
         if need_brecv:
             xs["brs"] = jnp.asarray(tplan.b_recv[sl])
+        if need_rw:
+            xs["rw"] = jnp.asarray(tplan.resid_write[sl])
+        if need_rd:
+            xs["rd"] = jnp.asarray(tplan.resid_read[sl])
         if streaming:
             xs["ssl"] = jnp.asarray(tplan.stream_slot[sl])
             xs["rot"] = jnp.asarray(tplan.stream_rot[sl])
@@ -506,26 +628,25 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                                       _zeros_of(skip_protos[rt.name]))
                         skip_seeds[rt.name] = jax.tree.map(
                             jnp.add, skip_seeds[rt.name], add)
+                if need_rd:
+                    rd = xt["rd"][idx]
+                    resid_in = [
+                        _select(rd >= 0, _dyn_read(bufl, rd),
+                                jnp.zeros(bufl.shape[1:], bufl.dtype))
+                        for bufl in st["resid"]]
+                else:
+                    # a coalesced segment may carry the BWD_W branch without
+                    # any Bw tick in its slice: the branch still traces, so
+                    # feed it (dead) zeros of the stash leaves
+                    resid_in = [jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype))
+                                for p in stash_protos]
 
             # 3. run exactly one task (XLA conditional: no masked work)
             if fb:
                 def apply_full(p_all, c, si, fr, ph):
-                    p = chunk_params(p_all, chunk_t)
-                    gstage = chunk_t * R + idx if chunked else idx
-                    ctx = TickCtx(stage=gstage, micro=micro_t,
-                                  valid=jnp.asarray(True), t=t, fresh=fr,
-                                  n_stages=tplan.n_stages, n_micro=m)
-                    carry_out, skips_out, res_new = stage_apply(p, c, si,
-                                                                resident, ctx)
-                    if not cfg.overlap:
-                        (carry_out,), = (_barrier(carry_out),)
-                    loss_i = jax.lax.cond(
-                        is_last_stage,
-                        lambda: loss_fn(ph, carry_out,
-                                        largs).astype(jnp.float32),
-                        lambda: jnp.zeros((), jnp.float32))
-                    return carry_out, normalize_skips(skips_out), loss_i, \
-                        res_new
+                    return stage_core(p_all, c, si, fr, ph,
+                                      micro_t, chunk_t, t, is_last_stage,
+                                      resident, largs)
 
                 def out_zeros():
                     o = {"res": resident}
@@ -540,6 +661,10 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                     if has_bw:
                         o["g_p"] = jax.tree.map(jnp.zeros_like, stage_params)
                         o["g_ph"] = jax.tree.map(jnp.zeros_like, head_params)
+                    if has_rx:
+                        o["resid"] = [jnp.zeros(tuple(p.shape),
+                                                jnp.dtype(p.dtype))
+                                      for p in stash_protos]
                     return o
 
                 def seeds_tuple():
@@ -600,6 +725,53 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                     o = out_zeros()
                     o.update(g_p=g_p, g_ph=g_ph)
                     return o
+
+                if reuse:
+                    # True ZB-H1 residual reuse: Bx vjp's the policy-wrapped
+                    # stage over ALL args, ships the input cotangents and
+                    # stashes the pullback's non-rederivable leaves; Bw
+                    # rebuilds the pullback around the stashed leaves, so
+                    # its own recompute is dead code XLA eliminates.
+                    full_args = (stage_params, x_f, skips_in, fresh_b,
+                                 head_params)
+
+                    # rederivable-at-Bw values (same micro, same rank, the
+                    # tick scalars, labels, resident state) are excluded
+                    # from the stash: the Bw tick substitutes its own live
+                    # copies, exactly as recompute-mode semantics would.
+                    rederivable = (resident, largs, micro_t, chunk_t, t,
+                                   is_last_stage, idx)
+
+                    def bx_branch():
+                        f = make_full_f(micro_t, chunk_t, t, is_last_stage,
+                                        resident, largs)
+                        _, vjp_fn, leaves, _, mask = _vjp_split(
+                            f, full_args, also_live=rederivable)
+                        assert mask == stash_mask, \
+                            "Bx residual structure diverged from the probe"
+                        _, g_c, g_si, g_fr, _ = vjp_fn(seeds_tuple())
+                        o = out_zeros()
+                        o.update(b=g_c, gskips=g_si, g_fr=g_fr)
+                        if has_rx:
+                            o["resid"] = [l for l, keep in zip(leaves, mask)
+                                          if keep]
+                        return o
+
+                    def bw_branch():
+                        f = make_full_f(micro_t, chunk_t, t, is_last_stage,
+                                        resident, largs)
+                        _, _, leaves, treedef, mask = _vjp_split(
+                            f, full_args, also_live=rederivable)
+                        assert mask == stash_mask, \
+                            "Bw residual structure diverged from the probe"
+                        it = iter(resid_in)
+                        merged = [next(it) if keep else leaf
+                                  for leaf, keep in zip(leaves, mask)]
+                        vjp2 = jax.tree_util.tree_unflatten(treedef, merged)
+                        g_p, _, _, _, g_ph = vjp2(seeds_tuple())
+                        o = out_zeros()
+                        o.update(g_p=g_p, g_ph=g_ph)
+                        return o
 
                 branch_of = {NOP: nop_branch, FWD: f_branch, BWD: b_branch,
                              BWD_X: bx_branch, BWD_W: bw_branch}
@@ -662,6 +834,11 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                                                       res["g_p"])
                         out["g_head"] = jax.tree.map(jnp.add, st["g_head"],
                                                      res["g_ph"])
+                if need_rw:
+                    rw = xt["rw"][idx]
+                    is_x = sel_t == remap[BWD_X]
+                    out["resid"] = _masked_write(st["resid"], res["resid"],
+                                                 rw, is_x & (rw >= 0))
                 if has_bi:
                     bi_sels = [remap[k] for k in plan_lib.BWD_INPUT_KINDS
                                if k in remap]
@@ -785,7 +962,8 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                        carry_proto=None,
                        skips: Sequence[SkipSpec] = (),
                        skip_protos: Optional[Dict[str, Any]] = None,
-                       axis: str = PIPE_AXIS):
+                       axis: str = PIPE_AXIS,
+                       resid_info: Optional[Dict[str, Any]] = None):
     """Build the fused schedule-driven training call.
 
     Returns ``call(stage_params, head_params, inputs_mb, loss_args_mb,
@@ -810,7 +988,11 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
     tables in :mod:`repro.core.schedules`.  Skip edges lower to
     portal/threaded routes per ``cfg.portals``; ``cfg.stream_inputs``
     (with ``m % n == 0``) shards the micro-batches over pipe and injects
-    them on plan ticks.
+    them on plan ticks.  For split-backward schedules,
+    ``cfg.residuals="reuse"`` lowers the Bx->Bw residual-stash events
+    (true ZB-H1: Bw re-reads what Bx materialized instead of recomputing);
+    pass a dict as ``resid_info`` to receive the stash geometry at trace
+    time.
     """
     n, m = cfg.pipe, cfg.n_micro
     v = cfg.virtual_stages
@@ -822,7 +1004,8 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                          f"pipe ({n})")
     cfg = cfg.with_(stream_inputs=streaming)
     tplan = plan_lib.plan_for(cfg.schedule, m, n, skips=skips,
-                              portals=cfg.portals)
+                              portals=cfg.portals,
+                              residuals=cfg.residuals)
 
     def inner(rank_arr, params, head_params, inputs_mb, loss_args_mb,
               bdiv=1, psum_axes=()):
@@ -847,7 +1030,8 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
                 loss_args_mb=loss_args_mb, loss_fn=loss_fn,
                 skip_protos=sk_protos,
                 carry_proto=localize(carry_proto), axis=axis,
-                rank=rank_arr[0], loss_scale=1.0 / bdiv)
+                rank=rank_arr[0], loss_scale=1.0 / bdiv,
+                resid_info=resid_info)
             if psum_axes:
                 # batch axes are manual here (old-jax fallback): the DP
                 # gradient reduction is explicit.

@@ -38,6 +38,17 @@ A plan carries these event families, all resolved at lowering time:
   symmetrically; in split-backward plans the seed stays parked after
   ``BWD_X`` reads it so ``BWD_W`` can re-seed the weight-gradient VJP.
 
+* **residual stash** (``residuals="reuse"``, true ZB-H1): on a ``BWD_X``
+  tick the executor captures the stage vjp's residuals (what the remat
+  policy saves — the values the weight gradient needs) and parks them in a
+  donated per-rank residual slot (``resid_write``); the matching ``BWD_W``
+  re-reads the slot (``resid_read``) instead of re-running the stage
+  forward, and the slot frees at the Bw tick.  Slot intervals are
+  allocated next to the park buffer (same free-list allocator); the
+  per-rank high-water is ``per_stage_resid`` and
+  ``schedules.peak_residuals`` predicts it exactly.  Fused-backward tables
+  carry no residual events (nothing crosses ticks).
+
 * **skip routes** (:class:`RoutePlan`, lowered from ``SkipSpec`` edges,
   paper §3.3): one route per (edge, destination).  Portal mode sends the
   value directly ``src -> dst`` with a single-pair collective-permute
@@ -167,6 +178,13 @@ class TaskPlan:
     per_stage_park: Tuple[int, ...]    # donated park high-water per rank
     has_backward: bool = True
     routes: Tuple[RoutePlan, ...] = ()
+    # --- split-backward residual reuse (ZB-H1, residuals="reuse") ---------
+    residuals: str = "recompute"       # effective mode ("reuse" only when
+    #   the table actually splits backward — fused tables coerce back)
+    resid_write: Optional[np.ndarray] = None   # [T, R] BWD_X -> stash slot
+    resid_read: Optional[np.ndarray] = None    # [T, R] BWD_W <- stash slot
+    resid_depth: int = 0               # SPMD residual buffer depth (max/rank)
+    per_stage_resid: Tuple[int, ...] = ()      # residual high-water per rank
 
     @property
     def stash_depth(self) -> int:
@@ -380,14 +398,21 @@ def _segments(kind: np.ndarray) -> Tuple[Segment, ...]:
 def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                 ranks: Optional[int] = None,
                 skips: Sequence[SkipSpec] = (), portals: bool = True,
-                forward_only: bool = False) -> TaskPlan:
+                forward_only: bool = False,
+                residuals: str = "recompute") -> TaskPlan:
     """Lower a validated task table to the fused executor's event plan.
 
     ``n`` is the number of GLOBAL stages; ``ranks`` (default ``n``) the
     number of executing devices — pass ``ranks < n`` for interleaved
     tables, where rank ``r`` hosts the ``n // ranks`` chunks
-    ``{r, r + ranks, ...}``.
+    ``{r, r + ranks, ...}``.  ``residuals="reuse"`` additionally allocates
+    the Bx->Bw residual-stash slots for split-backward tables (coerced back
+    to ``"recompute"`` when the table has no ``Bw`` — there is nothing to
+    reuse across ticks in a fused backward).
     """
+    if residuals not in ("recompute", "reuse"):
+        raise ValueError(f"unknown residuals mode {residuals!r}; "
+                         "want 'recompute' or 'reuse'")
     R = n if ranks is None else ranks
     if n % R:
         raise ValueError(f"stages ({n}) must tile ranks ({R})")
@@ -469,6 +494,27 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                 for tb in ix.b_ticks(i, s):
                     fs_slot[tb, s % R] = slot
 
+    # --- residual stash: BWD_X parks its vjp residuals until BWD_W --------
+    resid_write = np.full((T, R), -1, np.int32)
+    resid_read = np.full((T, R), -1, np.int32)
+    resid_depth = 0
+    resid_high = [0] * R
+    if residuals == "reuse" and ix.w:
+        r_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
+        for (i, s), tw in ix.w.items():
+            tb = ix.b.get((i, s))
+            assert tb is not None, f"Bw[{i},{s}] has no matching Bx"
+            assert tb < tw, \
+                f"Bw[{i},{s}] at tick {tw} must follow its Bx (tick {tb})"
+            r_iv[s % R].append((tb, tw, (i, s)))
+        r_assign, resid_depth, resid_high = _alloc_intervals(r_iv)
+        for (i, s), tw in ix.w.items():
+            slot = r_assign[(i, s)]
+            resid_write[ix.b[(i, s)], s % R] = slot
+            resid_read[tw, s % R] = slot
+    else:
+        residuals = "recompute"
+
     # --- stream injection: rank 0's chunk-0 forwards consume + rotate -----
     stream_rot = (kind[:, 0] == FWD) & (chunk[:, 0] == 0)
     for i in range(m):
@@ -482,7 +528,10 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                     T, n, R, m, v,
                     park_depth, max(b_depth, 1), max(fs_depth, 1),
                     per_stage_stash, tuple(park_high),
-                    has_backward=not forward_only, routes=routes)
+                    has_backward=not forward_only, routes=routes,
+                    residuals=residuals, resid_write=resid_write,
+                    resid_read=resid_read, resid_depth=resid_depth,
+                    per_stage_resid=tuple(resid_high))
 
 
 def schedule_table(schedule: str, m: int, n: int):
@@ -504,26 +553,36 @@ def schedule_table(schedule: str, m: int, n: int):
     raise ValueError(f"unknown schedule {schedule!r}")
 
 
-def schedule_bubble(schedule: str, m: int, n: int) -> float:
+def schedule_bubble(schedule: str, m: int, n: int,
+                    *, residuals: str = "recompute",
+                    remat: str = "dots") -> float:
     """Dedicated-device bubble fraction of the named schedule's table
     (cost-weighted critical-path idle share) — the dry-run cost model's
-    pipeline-efficiency term.  Returns 0 for a single-stage pipeline."""
+    pipeline-efficiency term.  ``residuals`` selects the split-backward
+    pricing (``"reuse"`` drops Bw's recompute — unless ``remat="full"``,
+    whose stash is empty and still recomputes).  Returns 0 for a
+    single-stage pipeline."""
     if n <= 1:
         return 0.0
     table, n_stages, ranks = schedule_table(schedule, m, n)
     return schedules.device_bubble_fraction(
-        table, ranks, schedules.default_task_cost(n_stages, ranks))
+        table, ranks,
+        schedules.default_task_cost(n_stages, ranks, residuals=residuals,
+                                    remat=remat))
 
 
 def plan_for(schedule: str, m: int, n: int, *,
              skips: Sequence[SkipSpec] = (),
-             portals: bool = True) -> TaskPlan:
+             portals: bool = True,
+             residuals: str = "recompute") -> TaskPlan:
     """Build + lower the named schedule for ``n`` pipe ranks.
 
     ``"gpipe"``/``"gpipe_tasked"``, ``"1f1b"``, ``"interleaved:v"`` and
     ``"zb"`` produce full F+B plans for the fused executor;
     ``"gpipe_fwd"`` produces the forward-only clock-cycle plan (paper
     Algorithm 1) that inference and the autodiff-backward path execute.
+    ``residuals="reuse"`` adds the Bx->Bw residual-stash events to
+    split-backward plans (``"zb"``).
     """
     if parse_schedule(schedule)[0] == "gpipe_fwd":
         table = [list(tick) for tick in schedules.clock_cycles(m, n)]
@@ -531,4 +590,4 @@ def plan_for(schedule: str, m: int, n: int, *,
                            forward_only=True)
     table, n_stages, ranks = schedule_table(schedule, m, n)
     return lower_tasks(table, m, n_stages, ranks=ranks, skips=skips,
-                       portals=portals)
+                       portals=portals, residuals=residuals)

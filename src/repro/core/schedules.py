@@ -286,7 +286,83 @@ def peak_stash(table: Sequence[Sequence[Task]], n: int,
     return peak
 
 
-def default_task_cost(n_stages: int, ranks: Optional[int] = None):
+def _tick_index(table: Sequence[Sequence[Task]]):
+    """Tick of each task, split by family: (F, B-or-Bx, Bw) dicts keyed
+    ``(micro, stage)``."""
+    f: dict = {}
+    b: dict = {}
+    w: dict = {}
+    for t, tick in enumerate(table):
+        for task in tick:
+            if task.kind == "F":
+                f[(task.micro, task.stage)] = t
+            elif task.kind in ("B", "Bx"):
+                b[(task.micro, task.stage)] = t
+            elif task.kind == "Bw":
+                w[(task.micro, task.stage)] = t
+    return f, b, w
+
+
+def _max_overlap(intervals: Sequence[Tuple[int, int]]) -> int:
+    """Peak number of concurrently live CLOSED intervals [a, c].
+
+    This is exactly the high-water mark of plan.py's free-list slot
+    allocator (``_alloc_intervals``): a slot is reusable strictly after its
+    last-use tick, so the allocator's peak equals the maximum overlap of
+    the closed intervals — the interval-graph clique number.
+    """
+    if not intervals:
+        return 0
+    events = sorted([(a, 1) for a, _ in intervals]
+                    + [(c + 1, -1) for _, c in intervals])
+    live = peak = 0
+    for _, d in events:
+        live += d
+        peak = max(peak, live)
+    return peak
+
+
+def peak_park(table: Sequence[Sequence[Task]], n: int,
+              *, ranks: Optional[int] = None) -> List[int]:
+    """EXACT per-rank high-water of the donated park buffer plan.py
+    allocates: one interval per (micro, stage >= 1) boundary value, live
+    from its ring arrival (producer's F + 1) until its last backward reader
+    (``Bw`` for split tables, ``B`` otherwise; the consuming F for
+    forward-only tables).  Unlike :func:`peak_stash` (the schedule-level
+    activation bound), this predicts ``TaskPlan.per_stage_park`` slot for
+    slot — stage 0 parks nothing, and the one-tick in-flight arrival is
+    included."""
+    slots = ranks if ranks is not None else n
+    f, b, w = _tick_index(table)
+    per_rank: List[List[Tuple[int, int]]] = [[] for _ in range(slots)]
+    for (i, s), tf in f.items():
+        if s == 0:
+            continue
+        arrive = f[(i, s - 1)] + 1
+        last = w.get((i, s), b.get((i, s), tf))
+        per_rank[s % slots].append((arrive, last))
+    return [_max_overlap(iv) for iv in per_rank]
+
+
+def peak_residuals(table: Sequence[Sequence[Task]], n: int,
+                   *, ranks: Optional[int] = None) -> List[int]:
+    """EXACT per-rank high-water of the residual stash a ``reuse`` plan
+    allocates: one interval per (micro, stage), live from the Bx tick that
+    materializes the vjp residuals until the Bw tick that consumes them.
+    All zeros for fused-backward tables (nothing crosses ticks)."""
+    slots = ranks if ranks is not None else n
+    _, b, w = _tick_index(table)
+    per_rank: List[List[Tuple[int, int]]] = [[] for _ in range(slots)]
+    for (i, s), tw in w.items():
+        tb = b.get((i, s))
+        if tb is None:
+            raise ValueError(f"Bw[{i},{s}] has no matching Bx")
+        per_rank[s % slots].append((tb, tw))
+    return [_max_overlap(iv) for iv in per_rank]
+
+
+def default_task_cost(n_stages: int, ranks: Optional[int] = None,
+                      *, residuals: str = "recompute", remat: str = "dots"):
     """Per-task cost model of the FUSED EXECUTOR, in stage-forward units.
 
     A stage holds ``ranks / n_stages`` of the model, so interleaved chunks
@@ -295,11 +371,19 @@ def default_task_cost(n_stages: int, ranks: Optional[int] = None):
     recompute + input-grad + weight-grad = 3 forwards' work; split ``Bx`` /
     ``Bw`` = recompute + one gradient half = 2 each (the split pays one
     extra recompute per micro — ZB's remat tradeoff, visible here rather
-    than hidden).
+    than hidden).  With ``residuals="reuse"`` the Bw re-reads the residuals
+    its Bx stashed instead of rematerializing, so ``Bw`` drops to 1 (the
+    weight-grad half alone) and the split's total cost returns to the fused
+    ``B``'s 3 — true ZB-H1 pricing.  EXCEPT under ``remat="full"``: the
+    full policy saves only the stage boundary inputs, so there is nothing
+    to stash and the executor's Bw still rematerializes (the degenerate
+    crossing the README policy table documents) — priced at 2 so the cost
+    model never promises a payoff the executor cannot deliver.
     """
     ranks = n_stages if ranks is None else ranks
     share = ranks / n_stages          # fraction of the model per stage
-    per_kind = {"F": 1.0, "B": 3.0, "Bx": 2.0, "Bw": 2.0, "R": 0.0}
+    bw = 1.0 if residuals == "reuse" and remat != "full" else 2.0
+    per_kind = {"F": 1.0, "B": 3.0, "Bx": 2.0, "Bw": bw, "R": 0.0}
 
     def cost(task: Task) -> float:
         return per_kind[task.kind] * share

@@ -71,10 +71,13 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     # the cost model is schedule-parametric: a train cell's step time is
     # stretched by the SELECTED schedule's dedicated-device bubble (1F1B
     # and GPipe share a critical path; interleaved shrinks the fill by
-    # ~1/v; zb fills bubbles with Bw work but pays a recompute) — not by
-    # the GPipe clock unconditionally.
+    # ~1/v; zb fills bubbles with Bw work and, under residuals="reuse",
+    # skips Bw's recompute entirely) — not by the GPipe clock
+    # unconditionally.
     bubble = (plan_lib.schedule_bubble(pcfg.schedule, pcfg.n_micro,
-                                       pcfg.pipe)
+                                       pcfg.pipe,
+                                       residuals=pcfg.residuals,
+                                       remat=pcfg.remat)
               if shape.kind == "train" else 0.0)
     rep = analysis.RooflineReport(
         arch=arch_name, shape=shape_name,
@@ -86,7 +89,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         xla_flops=float(ca.get("flops", 0.0)),
         schedule=pcfg.schedule, bubble_fraction=round(bubble, 4),
         notes=f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
-              f"sched={pcfg.schedule}")
+              f"sched={pcfg.schedule} residuals={pcfg.residuals}")
     out = rep.to_dict()
     out.update({
         "skipped": False,
@@ -100,7 +103,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         },
         "pcfg": {"pipe": pcfg.pipe, "tp": pcfg.tp, "data": pcfg.data,
                  "pod": pcfg.pod, "n_micro": pcfg.n_micro,
-                 "remat": pcfg.remat},
+                 "remat": pcfg.remat, "residuals": pcfg.residuals},
     })
     if verbose:
         print(f"[dryrun] {arch_name}/{shape_name} mesh={out['mesh']} "

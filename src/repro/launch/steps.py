@@ -33,7 +33,8 @@ def _carry_proto(model: LMModel, mbg: int, seq: int):
 
 def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
                      shape: ShapeConfig,
-                     ocfg: Optional[optim.OptimizerConfig] = None):
+                     ocfg: Optional[optim.OptimizerConfig] = None,
+                     resid_info: Optional[dict] = None):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
     ``pcfg.schedule`` selects the execution order: the default ``"gpipe"``
@@ -41,11 +42,15 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
     clock-cycle; ``"1f1b"`` / ``"gpipe_tasked"`` / ``"interleaved:v"`` /
     ``"zb"`` run the fused scheduler, where backward tasks execute inside
     the tick loop per the task table (see repro.core.plan) and the
-    activation stash is sized structurally.
+    activation stash is sized structurally.  ``pcfg.residuals="reuse"``
+    turns on ZB-H1 residual reuse for split-backward schedules; pass a
+    dict as ``resid_info`` to receive the residual-stash geometry (leaf
+    shapes, bytes per slot) when the step first traces.
     """
     ocfg = ocfg or optim.OptimizerConfig()
     if pcfg.schedule_base in ("1f1b", "gpipe_tasked", "interleaved", "zb"):
-        return _build_train_step_fused(model, pcfg, mesh, shape, ocfg)
+        return _build_train_step_fused(model, pcfg, mesh, shape, ocfg,
+                                       resid_info=resid_info)
     if pcfg.schedule != "gpipe":
         raise ValueError(f"unknown schedule {pcfg.schedule!r}; want 'gpipe', "
                          "'gpipe_tasked', '1f1b', 'interleaved:v', or 'zb'")
@@ -77,7 +82,8 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
 
 
 def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
-                            shape: ShapeConfig, ocfg: optim.OptimizerConfig):
+                            shape: ShapeConfig, ocfg: optim.OptimizerConfig,
+                            resid_info: Optional[dict] = None):
     """Schedule-driven train step: the pipeline computes its own gradients.
 
     The fused executor returns stage grads, head grads, and per-micro input
@@ -98,7 +104,8 @@ def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
         stage_apply, mesh=mesh, cfg=pcfg, loss_fn=micro_loss,
         skips=model.skips(),
         skip_protos=model.skip_protos(mbg, shape.seq_len),
-        carry_proto=_carry_proto(model, mbg, shape.seq_len))
+        carry_proto=_carry_proto(model, mbg, shape.seq_len),
+        resid_info=resid_info)
 
     def train_step(params, opt_state, batch):
         fresh, embed_vjp = jax.vjp(

@@ -178,12 +178,15 @@ def hetero_forward(program: HeteroProgram, mesh, pcfg: ParallelConfig,
     return stage_lib.unpack_buffer(buf, {"x": out_shape})["x"]
 
 
-def hetero_grad_call(program: HeteroProgram, mesh, pcfg: ParallelConfig):
+def hetero_grad_call(program: HeteroProgram, mesh, pcfg: ParallelConfig,
+                     resid_info: Optional[dict] = None):
     """Fused schedule-driven training call for a hetero (switch) program.
 
     The portal skip edges lower into the unified executor's plan, so the
     U-Net / AmoebaNet pipelines train under any ``pcfg.schedule`` (GPipe or
-    1F1B) with the same bitwise-stable gradients as the LM path.  Returns
+    1F1B) with the same bitwise-stable gradients as the LM path — including
+    ``"zb"`` with ``pcfg.residuals="reuse"`` (pass a dict as ``resid_info``
+    to receive the residual-stash geometry at trace time).  Returns
     ``call(stacked_params, x [B, ...], y [B, ...]) -> (loss, grads)``:
     loss is the mean-squared error of the final stage output against ``y``
     and grads mirror ``stacked_params``.
@@ -198,7 +201,7 @@ def hetero_grad_call(program: HeteroProgram, mesh, pcfg: ParallelConfig):
     pipe_grad, _ = pipeline_grad_call(
         program.stage_apply, mesh=mesh, cfg=pcfg, loss_fn=micro_loss,
         skips=program.skips, skip_protos=program.skip_protos,
-        carry_proto=program.carry_proto)
+        carry_proto=program.carry_proto, resid_info=resid_info)
 
     def call(stacked_params, x_batch, y_batch):
         bufs = stage_lib.pack_buffer({"x": x_batch}, max_elems)

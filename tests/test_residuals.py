@@ -1,0 +1,280 @@
+"""Residual-reuse plan properties (ZB-H1, ``residuals="reuse"``).
+
+Hypothesis suites prove, for random (m, n, v) tables, that the executed
+plan's high-water park + residual slot usage — traced tick by tick from
+the plan's own event arrays — exactly equals the schedule-level
+predictions (``schedules.peak_park`` / ``schedules.peak_residuals``), and
+that malformed reuse tables (a Bw before its Bx, a double-freeing second
+Bw) are rejected.  Edge-case schedules (m < n, m = 1, stages that don't
+tile the rank count) and the parse-time config validation ride along.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ParallelConfig
+from repro.core import plan as PL
+from repro.core import schedules as S
+from repro.core.plan import _alloc_intervals
+from repro.core.schedules import Task
+
+mn = st.tuples(st.integers(1, 16), st.integers(1, 8))
+wnv = st.tuples(st.integers(1, 3), st.integers(1, 5), st.integers(2, 3))
+
+
+def traced_highwater(write, read, rank):
+    """Max concurrently-occupied slots on ``rank``, replayed from the plan
+    arrays: a slot goes live at its write tick and stays live through its
+    last read before the next write of the same slot."""
+    T = write.shape[0]
+    open_t, last_rd, intervals = {}, {}, []
+    for t in range(T):
+        w, r = int(write[t, rank]), int(read[t, rank])
+        if w >= 0:
+            if w in open_t:          # slot recycled: close the old residency
+                intervals.append((open_t[w], last_rd[w]))
+            open_t[w] = t
+            last_rd[w] = t
+        if r >= 0:
+            assert r in open_t, f"tick {t}: read of never-written slot {r}"
+            last_rd[r] = t
+    intervals += [(t0, last_rd[s]) for s, t0 in open_t.items()]
+    # closed-interval max overlap == the free-list allocator's high-water
+    events = sorted([(a, 1) for a, _ in intervals]
+                    + [(c + 1, -1) for _, c in intervals])
+    live = peak = 0
+    for _, d in events:
+        live += d
+        peak = max(peak, live)
+    return peak
+
+
+@given(mn)
+@settings(max_examples=40, deadline=None)
+def test_zb_reuse_slot_highwater_matches_prediction(m_n):
+    """For every random (m, n): the reuse plan's traced park AND residual
+    slot high-water equals peak_park / peak_residuals exactly, per rank."""
+    m, n = m_n
+    table = S.zb_schedule(m, n)
+    plan = PL.lower_tasks(table, m, n, residuals="reuse")
+    assert plan.residuals == "reuse"
+    pred_park = S.peak_park(table, n)
+    pred_resid = S.peak_residuals(table, n)
+    assert list(plan.per_stage_park) == pred_park
+    assert list(plan.per_stage_resid) == pred_resid
+    assert plan.resid_depth == max(pred_resid)
+    for r in range(n):
+        assert traced_highwater(plan.park_recv, plan.park_read, r) \
+            == pred_park[r], ("park", m, n, r)
+        assert traced_highwater(plan.resid_write, plan.resid_read, r) \
+            == pred_resid[r], ("resid", m, n, r)
+    # every Bx writes a residual slot and its Bw reads the same slot
+    for r in range(n):
+        by_micro = {}
+        for t in range(plan.n_ticks):
+            if plan.kind[t, r] == PL.BWD_X:
+                assert plan.resid_write[t, r] >= 0
+                by_micro[int(plan.micro[t, r])] = int(plan.resid_write[t, r])
+            if plan.kind[t, r] == PL.BWD_W:
+                assert int(plan.resid_read[t, r]) \
+                    == by_micro[int(plan.micro[t, r])]
+
+
+@given(mn)
+@settings(max_examples=30, deadline=None)
+def test_park_highwater_matches_prediction_fused(m_n):
+    """peak_park predicts the donated park high-water for the fused tables
+    too (gpipe / 1f1b), traced from the plan's own arrays."""
+    m, n = m_n
+    for table in (S.gpipe_schedule(m, n, checkpoint=False),
+                  S.one_f_one_b_schedule(m, n)):
+        plan = PL.lower_tasks(table, m, n)
+        pred = S.peak_park(
+            [tick for tick in table if any(t.kind != "R" for t in tick)], n)
+        assert list(plan.per_stage_park) == pred
+        for r in range(n):
+            assert traced_highwater(plan.park_recv, plan.park_read, r) \
+                == pred[r]
+
+
+@given(wnv)
+@settings(max_examples=25, deadline=None)
+def test_interleaved_park_prediction_chunked(wnv_):
+    """Chunked tables aggregate co-resident stages into per-RANK peaks;
+    the prediction stays exact."""
+    w, n, v = wnv_
+    m = w * n
+    table = S.interleaved_1f1b_schedule(m, n, v)
+    plan = PL.lower_tasks(table, m, n * v, ranks=n)
+    pred = S.peak_park(table, n * v, ranks=n)
+    assert list(plan.per_stage_park) == pred
+    for r in range(n):
+        assert traced_highwater(plan.park_recv, plan.park_read, r) == pred[r]
+
+
+# ---------------------------------------------------------------------------
+# Reject paths: malformed reuse tables
+# ---------------------------------------------------------------------------
+
+def test_reject_bw_before_bx():
+    """A Bw scheduled before its Bx is rejected (validate's split-backward
+    ordering check runs inside lower_tasks)."""
+    # hoist Bw[0,1] to tick 0, ahead of its Bx
+    moved = Task("Bw", 0, 1)
+    table = [[t for t in tick if t != moved]
+             for tick in S.zb_schedule(4, 2)]
+    table[0].append(moved)
+    with pytest.raises(AssertionError, match="Bx"):
+        S.validate(table, 4, 2, backward_micro_order=False)
+    with pytest.raises(AssertionError):
+        PL.lower_tasks(table, 4, 2, residuals="reuse")
+
+
+def test_reject_double_free():
+    """A second Bw for the same (micro, stage) — a double free of the
+    residual slot — is rejected as a duplicate task."""
+    table = [list(tick) for tick in S.zb_schedule(4, 2)]
+    table.append([Task("Bw", 0, 0)])
+    with pytest.raises(AssertionError, match="duplicate"):
+        S.validate(table, 4, 2, backward_micro_order=False)
+    with pytest.raises(AssertionError):
+        PL.lower_tasks(table, 4, 2, residuals="reuse")
+
+
+def test_reject_bw_without_bx():
+    """peak_residuals refuses a Bw with no matching Bx."""
+    table = [[Task("F", 0, 0)], [Task("Bw", 0, 0)]]
+    with pytest.raises(ValueError, match="no matching Bx"):
+        S.peak_residuals(table, 1)
+
+
+def test_reject_interval_arriving_after_last_use():
+    """The slot allocator itself refuses inverted intervals (the second
+    line of defense under a validate bypass)."""
+    with pytest.raises(AssertionError, match="arrives"):
+        _alloc_intervals([[(5, 3, "x")]])
+
+
+def test_reject_unknown_residuals_mode():
+    with pytest.raises(ValueError, match="residuals"):
+        PL.lower_tasks(S.zb_schedule(2, 2), 2, 2, residuals="cached")
+
+
+# ---------------------------------------------------------------------------
+# Edge-case schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 4), (2, 4), (3, 5)])
+def test_zb_reuse_edge_shapes(m, n):
+    """m < n and m = 1: the reuse plan still covers every task, pairs each
+    Bx with a residual slot, and the predictions hold."""
+    table = S.zb_schedule(m, n)
+    plan = PL.lower_tasks(table, m, n, residuals="reuse")
+    n_bx = int((plan.kind == PL.BWD_X).sum())
+    n_bw = int((plan.kind == PL.BWD_W).sum())
+    assert n_bx == n_bw == m * n
+    assert int((plan.resid_write >= 0).sum()) == m * n
+    assert int((plan.resid_read >= 0).sum()) == m * n
+    assert list(plan.per_stage_resid) == S.peak_residuals(table, n)
+    # with one micro-batch at most one residual is ever live per rank
+    if m == 1:
+        assert plan.resid_depth == 1
+
+
+def test_stages_must_tile_ranks():
+    """A v that doesn't divide the stage count onto the ranks is a clear
+    ValueError at lowering, not a deep executor failure."""
+    table = S.one_f_one_b_schedule(4, 6)
+    with pytest.raises(ValueError, match="tile"):
+        PL.lower_tasks(table, 4, 6, ranks=4)
+    with pytest.raises(ValueError, match="divisible"):
+        S.interleaved_1f1b_schedule(6, 4, 2)     # m % n != 0
+
+
+def test_reuse_coerces_on_fused_tables():
+    """residuals="reuse" on a fused-backward schedule has nothing to reuse
+    across ticks: the plan coerces to recompute with zero residual slots."""
+    for schedule in ("gpipe_tasked", "1f1b", "interleaved:2"):
+        p = PL.plan_for(schedule, 4, 2, residuals="reuse")
+        assert p.residuals == "recompute"
+        assert p.resid_depth == 0
+        assert (p.resid_write == -1).all() and (p.resid_read == -1).all()
+    fwd = PL.plan_for("gpipe_fwd", 4, 2)
+    assert fwd.residuals == "recompute"
+
+
+# ---------------------------------------------------------------------------
+# Cost model + config validation
+# ---------------------------------------------------------------------------
+
+def test_reuse_cost_model_prices_bw_cheaper():
+    """Under reuse pricing Bw = 1 forward (no second remat): the zb
+    dedicated-device critical path strictly undercuts both recompute-zb and
+    plain 1F1B whenever there is real pipelining."""
+    for m, n in [(4, 4), (8, 4), (8, 2), (2, 4)]:
+        table = S.zb_schedule(m, n)
+        t_rec, _ = S.simulate_device_times(
+            table, n, S.default_task_cost(n, n, residuals="recompute"))
+        t_reu, _ = S.simulate_device_times(
+            table, n, S.default_task_cost(n, n, residuals="reuse"))
+        assert t_reu < t_rec, (m, n)
+        t_f1b, _ = S.simulate_device_times(S.one_f_one_b_schedule(m, n), n)
+        if n > 1:
+            assert t_reu < t_f1b, (m, n)
+    # remat="full" + reuse has an empty stash and still recomputes: the
+    # cost model must price it as recompute, never promising a payoff the
+    # executor cannot deliver
+    table = S.zb_schedule(8, 4)
+    t_rec, _ = S.simulate_device_times(
+        table, 4, S.default_task_cost(4, 4, residuals="recompute"))
+    t_degenerate, _ = S.simulate_device_times(
+        table, 4, S.default_task_cost(4, 4, residuals="reuse", remat="full"))
+    assert t_degenerate == t_rec
+    # schedule_bubble is residuals- and remat-aware (the dry-run term)
+    assert PL.schedule_bubble("zb", 8, 4, residuals="reuse") \
+        != PL.schedule_bubble("zb", 8, 4, residuals="recompute")
+    assert PL.schedule_bubble("zb", 8, 4, residuals="reuse", remat="full") \
+        == PL.schedule_bubble("zb", 8, 4, residuals="recompute")
+    assert PL.schedule_bubble("zb", 8, 1, residuals="reuse") == 0.0
+
+
+def test_config_validates_at_parse_time():
+    """Typo'd remat / residuals values fail when the config is BUILT
+    (satellite: no more failing deep inside wrap_stage)."""
+    with pytest.raises(ValueError, match="remat"):
+        ParallelConfig(remat="fulll")
+    with pytest.raises(ValueError, match="residuals"):
+        ParallelConfig(residuals="reuse_maybe")
+    with pytest.raises(ValueError, match="virtual"):
+        ParallelConfig(schedule="interleaved:0")
+    # the valid cross-product constructs
+    for remat in ("none", "full", "dots", "dots_no_batch"):
+        for residuals in ("recompute", "reuse"):
+            cfg = ParallelConfig(remat=remat, residuals=residuals)
+            assert cfg.remat == remat and cfg.residuals == residuals
+
+
+def test_policies_match_checkpointing():
+    """configs.base.REMAT_POLICIES is the same tuple checkpointing.POLICIES
+    exposes (the comment-drift satellite, now enforced)."""
+    from repro.configs.base import REMAT_POLICIES, RESIDUAL_MODES
+    from repro.core import checkpointing
+    assert checkpointing.POLICIES == REMAT_POLICIES
+    assert RESIDUAL_MODES == ("recompute", "reuse")
+    with pytest.raises(ValueError):
+        checkpointing.wrap_stage(lambda x: x, "bogus")
+    with pytest.raises(ValueError):
+        checkpointing.wrap_for_residuals(lambda x: x, "full", "bogus")
+
+
+def test_kind_arrays_zb_reuse_vs_recompute_identical():
+    """Reuse changes WHAT backward ticks do, never WHEN: the task grid
+    (kind/micro/chunk), park and b-inbox events are identical to the
+    recompute plan's — only the residual events are added."""
+    a = PL.plan_for("zb", 8, 4)
+    b = PL.plan_for("zb", 8, 4, residuals="reuse")
+    for field in ("kind", "micro", "chunk", "park_recv", "park_read",
+                  "b_recv", "b_read"):
+        assert np.array_equal(getattr(a, field), getattr(b, field)), field
+    assert a.segments == b.segments
+    assert (a.resid_write == -1).all() and (b.resid_write >= 0).sum() == 32
