@@ -1,4 +1,6 @@
-"""Schedule A/B benchmark: GPipe vs 1F1B vs interleaved vs zero-bubble.
+"""Schedule A/B benchmark: GPipe vs 1F1B vs interleaved vs zero-bubble,
+crossed with the executor lowering (SPMD reference vs MPMD per-rank
+specialized programs).
 
 Runs the fused scheduler (``gpipe_tasked`` / ``1f1b`` / ``interleaved:2`` /
 ``zb`` / ``zb-reuse``) and the legacy-semantics autodiff path (``gpipe``,
@@ -9,7 +11,15 @@ trajectory has a baseline.  ``zb-reuse`` is ``schedule="zb"`` with
 ``residuals="reuse"`` + ``remat="dots"`` (true ZB-H1: Bx stashes the
 matmul outputs its remat materialized, Bw re-reads them instead of
 recomputing — Bw is priced at 1 forward instead of 2), A/B'd against
-recompute-mode ``zb`` with its residual-stash bytes reported.  Per row:
+recompute-mode ``zb`` with its residual-stash bytes reported.  Every fused
+schedule's LM row additionally gets an ``executor="mpmd"`` A/B row: the
+same plan lowered to per-rank specialized programs (``plan.specialize``)
+with the chain ``ppermute`` double-buffered one tick ahead —
+bitwise-identical results (tests/test_schedule_exec.py, which also covers
+the portal/U-Net models under mpmd; the unet-portal rows here are
+measured spmd-only), so the row reports the perf story: the
+overlapped-comm device model and the per-rank declared buffer bytes.
+Per row:
 
 * ``us_per_step`` — measured wall-clock per train step.  This container
   timeshares every "device" over the same host cores, so wall-clock tracks
@@ -20,11 +30,12 @@ recompute-mode ``zb`` with its residual-stash bytes reported.  Per row:
 * ``us_per_step_device_model`` — event-driven critical path of the task
   table on ``pipe`` DEDICATED devices (schedules.simulate_device_times),
   with per-task costs calibrated from a MEASURED single-device sequential
-  step of the same model (so the unit reflects real compute, and the
-  fused executor's remat costs — fused B = 3 forwards, split Bx/Bw = 2
-  each — are priced as implemented).  This is the schedule-comparison
-  clock: interleaving shrinks the fill/drain by ~1/v, ZB fills bubbles
-  with Bw work.
+  step of the same model, plus a chain-hop comm term (``COMM_UNITS``
+  stage-forward units per cross-rank boundary hop).  Under
+  ``executor="spmd"`` the hop serializes after the producing task; under
+  ``"mpmd"`` the double-buffered send overlaps the next tick's compute —
+  so the mpmd model is <= the spmd model for every table, and the delta
+  is exactly the comm the overlap hides.
 * ``bubble_fraction_theoretical`` — idle (rank, tick) slots in the table.
 * ``bubble_fraction_measured`` — cost-weighted idle share of the
   calibrated device-model critical path.
@@ -36,15 +47,24 @@ recompute-mode ``zb`` with its residual-stash bytes reported.  Per row:
   stage 0 parks nothing — its input is re-gathered from the micro-batch
   buffer).  ``stash_bound`` keeps the schedule-level ``min(n - j, m)`` /
   ``m`` bound for comparison with the paper; ``park_depth`` is the
-  uniform SPMD buffer depth the compiled program allocates.
+  uniform SPMD buffer depth the compiled program allocates.  MPMD rows
+  additionally carry ``per_rank_buffer_bytes`` — what each rank's
+  SPECIALIZED program declares (park + backward inbox + residual slots,
+  from ``plan.specialize``) — next to
+  ``uniform_max_buffer_bytes_per_rank``, the flattened SPMD allocation;
+  rank 0 under 1f1b/zb sits strictly below the uniform max.
 
 Two model families cover the unified runtime's surface: the plain LM path
 and a U-Net-style portal model (cross-stage skip edges lowered to plan
-routes), so the bench trajectory breaks if either regresses.
+routes), so the bench trajectory breaks if either regresses.  The portal
+rows carry the same device-model columns (calibrated against their own
+measured gpipe_tasked wall), so smoke tripwires can compare against full
+runs.
 
 ``--smoke`` runs a tiny grid and fails if any fused schedule's wall-clock
-exceeds 1.5x gpipe_tasked's — the CI tripwire for executor-overhead
-regressions.
+exceeds its overhead cap vs gpipe_tasked, if zb-reuse's device model
+exceeds zb-recompute's, or if any schedule's mpmd device model exceeds its
+spmd device model — the CI tripwires for executor regressions.
 """
 import json
 import os
@@ -64,6 +84,7 @@ from repro.configs.base import ShapeConfig, ParallelConfig
 from repro.core import plan as plan_lib
 from repro.core import schedules as S
 from repro.launch import mesh as mesh_lib, steps
+from repro.launch import sharding as sharding_lib
 from repro.models.lm import LMModel
 from repro.models import pipeline_hetero as PH
 from repro.models.unet import UNetConfig, UNetModel
@@ -77,6 +98,12 @@ rows = []
 
 FUSED = ("gpipe_tasked", "1f1b", "interleaved:2", "zb", "zb-reuse")
 SCHEDULES = FUSED if SMOKE else ("gpipe",) + FUSED
+# chain-hop comm price, in stage-forward units: one boundary activation
+# over an ICI-class link vs one stage forward of compute — a fixed
+# TPU-flavoured ratio (the smoke model's own arithmetic intensity is too
+# low to calibrate it honestly on CPU).  Reported per row so the A/B
+# delta (what the mpmd overlap hides) is auditable.
+COMM_UNITS = 0.1
 
 def variant(name):
     # bench row name -> (schedule, residuals, remat).  zb-reuse pairs the
@@ -86,7 +113,8 @@ def variant(name):
         return "zb", "reuse", "dots"
     return name, "recompute", "full"
 
-def stash_report(name, pipe, m, carry_bytes, resid_info=None):
+def stash_report(name, pipe, m, carry_bytes, resid_info=None,
+                 executor="spmd"):
     if name == "gpipe":
         # autodiff keeps every micro's boundary input alive as a residual
         return dict(park_depth=m, per_stage_stash=[m] * pipe,
@@ -96,31 +124,40 @@ def stash_report(name, pipe, m, carry_bytes, resid_info=None):
     schedule, residuals, _ = variant(name)
     tplan = plan_lib.plan_for(schedule, m, pipe, residuals=residuals)
     bps = (resid_info or {{}}).get("resid_bytes_per_slot", 0)
-    return dict(park_depth=tplan.park_depth,
-                per_stage_stash=list(tplan.per_stage_park),
-                stash_bound=list(tplan.per_stage_stash),
-                per_stage_activation_bytes=[d * carry_bytes
-                                            for d in tplan.per_stage_park],
-                carry_bytes_per_micro=carry_bytes,
-                residuals=tplan.residuals,
-                resid_slots=list(tplan.per_stage_resid),
-                resid_depth=tplan.resid_depth,
-                residual_bytes_per_slot=bps,
-                residual_stash_bytes=[s * bps
-                                      for s in tplan.per_stage_resid])
+    out = dict(park_depth=tplan.park_depth,
+               per_stage_stash=list(tplan.per_stage_park),
+               stash_bound=list(tplan.per_stage_stash),
+               per_stage_activation_bytes=[d * carry_bytes
+                                           for d in tplan.per_stage_park],
+               carry_bytes_per_micro=carry_bytes,
+               residuals=tplan.residuals,
+               resid_slots=list(tplan.per_stage_resid),
+               resid_depth=tplan.resid_depth,
+               residual_bytes_per_slot=bps,
+               residual_stash_bytes=[s * bps
+                                     for s in tplan.per_stage_resid])
+    if executor == "mpmd":
+        # what each rank's SPECIALIZED program declares, vs the flattened
+        # SPMD allocation (one executable must carry the ring max)
+        out.update(sharding_lib.per_rank_buffer_bytes(tplan, carry_bytes,
+                                                      bps))
+    return out
 
-def schedule_model(name, pipe, m, unit_us):
+def schedule_model(name, pipe, m, unit_us, executor="spmd"):
     schedule, residuals, remat = variant(name)
     table, n_stages, ranks = plan_lib.schedule_table(schedule, m, pipe)
     cost = S.default_task_cost(n_stages, ranks, residuals=residuals,
                                remat=remat)
-    t_end, busy = S.simulate_device_times(table, ranks, cost)
+    t_end, busy = S.simulate_device_times(table, ranks, cost,
+                                          comm_cost=COMM_UNITS,
+                                          overlap_comm=executor == "mpmd")
     return dict(
         bubble_fraction_theoretical=round(S.bubble_fraction(table,
                                                             ranks=ranks), 4),
         bubble_fraction_measured=round(
             1.0 - sum(busy) / (ranks * t_end), 4) if t_end else 0.0,
-        us_per_step_device_model=round(t_end * unit_us, 1))
+        us_per_step_device_model=round(t_end * unit_us, 1),
+        comm_cost_units=COMM_UNITS)
 
 def time_step(step, *args):
     out = step(*args)                      # compile + warm
@@ -134,11 +171,11 @@ def time_step(step, *args):
         best = min(best, time.perf_counter() - t0)   # min: noise-robust
     return best, out
 
-def lm_build(name, pipe, m):
+def lm_build(name, pipe, m, executor="spmd"):
     schedule, residuals, remat = variant(name)
     pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
                           remat=remat, schedule=schedule,
-                          residuals=residuals)
+                          residuals=residuals, executor=executor)
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
     params = model.init(key)
@@ -160,38 +197,45 @@ def lm_step_time(name, pipe, m):
         dt, _ = time_step(step, params, opt, batch)
     return dt, loss
 
+EXECUTORS = ("spmd", "mpmd")
+
 for pipe, m in {grid}:
     # calibrate the device-model unit: one MEASURED sequential step
     # (pipe=1, fused executor) = m micros x (F + fused B = 4) model-forward
     # units of real compute on this machine.
     t_seq, _ = lm_step_time("gpipe_tasked", 1, m)
     unit_us = t_seq * 1e6 / (4 * m)
-    # compile every schedule first, then time ROUND-ROBIN (paired
-    # min-of-rounds): schedule-vs-schedule wall ratios on a timeshared
-    # host are noise-dominated unless measured back-to-back.
-    built = {{s: lm_build(s, pipe, m) for s in SCHEDULES}}
-    walls = {{s: float("inf") for s in SCHEDULES}}
+    # compile every schedule x executor first, then time ROUND-ROBIN
+    # (paired min-of-rounds): schedule-vs-schedule wall ratios on a
+    # timeshared host are noise-dominated unless measured back-to-back.
+    keys = [(s, e) for s in SCHEDULES
+            for e in (EXECUTORS if s != "gpipe" else ("spmd",))]
+    built = {{k: lm_build(k[0], pipe, m, executor=k[1]) for k in keys}}
+    walls = {{k: float("inf") for k in keys}}
     rounds = 2 if SMOKE else 4
     for _ in range(rounds):
-        for s in SCHEDULES:
-            step, params, opt, batch, mesh = built[s][:5]
+        for k in keys:
+            step, params, opt, batch, mesh = built[k][:5]
             with set_mesh(mesh):
                 dt, _ = time_step(step, params, opt, batch)
-            walls[s] = min(walls[s], dt)
+            walls[k] = min(walls[k], dt)
     base_model_us = None
-    for name in SCHEDULES:
+    for name, executor in keys:
         mbg = shape.global_batch // m
         carry_bytes = mbg * shape.seq_len * arch.d_model * 4  # f32 boundary
-        model_cols = schedule_model(name, pipe, m, unit_us)
-        if name == "gpipe_tasked":
+        model_cols = schedule_model(name, pipe, m, unit_us, executor)
+        if (name, executor) == ("gpipe_tasked", "spmd"):
             base_model_us = model_cols["us_per_step_device_model"]
+        # the loss is executor- and schedule-invariant (bitwise contract)
         rows.append(dict(
             model="lm", schedule=name, pipe=pipe, n_micro=m,
-            us_per_step=round(walls[name] * 1e6, 1),
+            executor=executor,
+            us_per_step=round(walls[(name, executor)] * 1e6, 1),
             us_per_step_sequential=round(t_seq * 1e6, 1),
-            loss=built[name][5], **model_cols,
+            loss=built[(name, executor)][5], **model_cols,
             **stash_report(name, pipe, m, carry_bytes,
-                           resid_info=built[name][6])))
+                           resid_info=built[(name, executor)][6],
+                           executor=executor)))
     del built
     for r in rows:
         if r["model"] == "lm" and r["pipe"] == pipe and r["n_micro"] == m:
@@ -205,6 +249,7 @@ if not SMOKE:
     x = jax.random.normal(jax.random.PRNGKey(1), (UB, ucfg.img, ucfg.img, 3))
     for pipe, m in [(4, 4)]:
         losses = {{}}
+        urows = []
         for name in FUSED:
             schedule, residuals, remat = variant(name)
             pcfg = ParallelConfig(pipe=pipe, tp=1, data=2, pod=1, n_micro=m,
@@ -224,12 +269,29 @@ if not SMOKE:
                                                    resid_info=resid_info))
                 dt, (loss, _) = time_step(call, prog.stacked_params, x, tgt)
             losses[name] = float(loss)
-            rows.append(dict(
+            urows.append(dict(
                 model="unet-portal", schedule=name, pipe=pipe, n_micro=m,
-                n_skip_edges=len(prog.skips),
+                executor="spmd", n_skip_edges=len(prog.skips),
                 us_per_step=round(dt * 1e6, 1), loss=float(loss),
                 **stash_report(name, pipe, m, carry_bytes,
                                resid_info=resid_info)))
+        # device-model columns for the portal rows, calibrated against the
+        # measured gpipe_tasked wall (no single-device portal run exists):
+        # unit_us = wall(gpipe_tasked) / t_end_model(gpipe_tasked), so the
+        # gpipe_tasked row's model time equals its wall by construction
+        # and the other rows scale by the table critical path.  The
+        # uniform-stage cost model approximates the hetero stage split.
+        base_tbl, base_n, base_r = plan_lib.schedule_table("gpipe_tasked",
+                                                           m, pipe)
+        t_base, _ = S.simulate_device_times(
+            base_tbl, base_r, S.default_task_cost(base_n, base_r),
+            comm_cost=COMM_UNITS)
+        u_unit = [r for r in urows
+                  if r["schedule"] == "gpipe_tasked"][0]["us_per_step"] \
+            / t_base
+        for r in urows:
+            r.update(schedule_model(r["schedule"], pipe, m, u_unit))
+        rows.extend(urows)
         # the unified runtime's contract: schedules are the same computation
         assert len(set(losses.values())) == 1, losses
 
@@ -244,7 +306,7 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
     out = run_with_devices(
         BENCH.format(grid=tuple(grid), batch=batch, seq=seq,
                      smoke=repr(smoke)),
-        n_devices=n_devices, timeout=3600)
+        n_devices=n_devices, timeout=5400)
     rows = json.loads(out.split("JSON", 1)[1])
     for r in rows:
         extra = ""
@@ -252,12 +314,13 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
             extra = (f",model={r['us_per_step_device_model']}"
                      f",bubble={r['bubble_fraction_theoretical']}")
         print(f"schedule_{r['model']}_{r['schedule']}_p{r['pipe']}"
-              f"_m{r['n_micro']},{r['us_per_step']}{extra}")
+              f"_m{r['n_micro']}_{r.get('executor', 'spmd')},"
+              f"{r['us_per_step']}{extra}")
 
-    by_key = {(r["model"], r["pipe"], r["n_micro"], r["schedule"]): r
-              for r in rows}
-    for (model, pipe, m, s), r in by_key.items():
-        g = by_key.get((model, pipe, m, "gpipe_tasked"))
+    by_key = {(r["model"], r["pipe"], r["n_micro"], r["schedule"],
+               r.get("executor", "spmd")): r for r in rows}
+    for (model, pipe, m, s, ex), r in by_key.items():
+        g = by_key.get((model, pipe, m, "gpipe_tasked", "spmd"))
         if g is None:
             continue
         if s == "1f1b":
@@ -276,38 +339,60 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
             # CI tripwire: fused-executor overhead must stay bounded.  At
             # the smoke shape compute is negligible, so interleaved pays
             # its v-fold branch-dispatch overhead in full — it gets a
-            # proportionally wider bound; the others must stay within 1.5x.
-            cap = 2.5 if s.startswith("interleaved") else 1.5
+            # proportionally wider bound; so does the mpmd lowering, whose
+            # R-way rank switch adds pure dispatch (never compute) at this
+            # degenerate scale.  spmd rows must stay within 1.5x.
+            cap = 2.5 if (s.startswith("interleaved") or ex == "mpmd") \
+                else 1.5
             assert r["us_per_step"] <= cap * g["us_per_step"], \
-                (s, r["us_per_step"], g["us_per_step"], cap)
+                (s, ex, r["us_per_step"], g["us_per_step"], cap)
 
     # residual-reuse tripwire (smoke AND full): dropping Bw's recompute
     # must shorten the zb dedicated-device step, and the reuse row must
     # actually carry a residual stash.
-    for (model, pipe, m, s), r in by_key.items():
+    for (model, pipe, m, s, ex), r in by_key.items():
         if s != "zb-reuse" or model != "lm":
             continue
-        z = by_key[(model, pipe, m, "zb")]
+        z = by_key[(model, pipe, m, "zb", ex)]
         assert r["us_per_step_device_model"] <= z["us_per_step_device_model"], \
-            (pipe, m, r["us_per_step_device_model"],
+            (pipe, m, ex, r["us_per_step_device_model"],
              z["us_per_step_device_model"])
         assert r["residuals"] == "reuse" and sum(r["resid_slots"]) > 0
         assert sum(r["residual_stash_bytes"]) > 0, r["residual_bytes_per_slot"]
 
+    # executor A/B tripwires (smoke AND full):
+    #  * the mpmd (comm-overlapped) device model must be <= spmd for EVERY
+    #    fused schedule — the double buffering can only hide comm;
+    #  * mpmd rows declare per-rank buffer bytes strictly below the
+    #    uniform SPMD max for at least one rank (1f1b/zb: rank 0 parks 0).
+    for (model, pipe, m, s, ex), r in by_key.items():
+        if model != "lm" or ex != "mpmd":
+            continue
+        sp = by_key[(model, pipe, m, s, "spmd")]
+        assert r["us_per_step_device_model"] <= \
+            sp["us_per_step_device_model"], \
+            (s, pipe, m, r["us_per_step_device_model"],
+             sp["us_per_step_device_model"])
+        if s in ("1f1b", "zb", "zb-reuse") and pipe > 1:
+            uni = r["uniform_max_buffer_bytes_per_rank"]
+            assert any(b < uni for b in r["per_rank_buffer_bytes"]), \
+                (s, pipe, m, r["per_rank_buffer_bytes"], uni)
+
     if smoke:
         print("# smoke OK (fused schedules within their overhead caps; "
-              "zb-reuse device model <= zb-recompute)")
+              "zb-reuse device model <= zb-recompute; mpmd device model "
+              "<= spmd with per-rank buffers below uniform max)")
         return rows
 
     # schedule-payoff acceptance: on dedicated devices, interleaving and/or
     # split backward must strictly undercut plain 1F1B at pipe=4
     for m in (4, 8):
-        f = by_key.get(("lm", 4, m, "1f1b"))
+        f = by_key.get(("lm", 4, m, "1f1b", "spmd"))
         if f is None:
             continue
         better = [s for s in ("interleaved:2", "zb", "zb-reuse")
-                  if ("lm", 4, m, s) in by_key
-                  and by_key[("lm", 4, m, s)]["us_per_step_device_model"]
+                  if ("lm", 4, m, s, "spmd") in by_key
+                  and by_key[("lm", 4, m, s, "spmd")]["us_per_step_device_model"]
                   < f["us_per_step_device_model"]]
         assert better, f"no schedule beats 1f1b at pipe=4, m={m}"
     report = {"bench": "schedules", "arch": "smollm-360m(smoke)+unet(smoke)",

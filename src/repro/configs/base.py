@@ -153,6 +153,14 @@ REMAT_POLICIES = ("none", "full", "dots", "dots_no_batch")
 #: materialized and re-reads them at Bw (no second remat).
 RESIDUAL_MODES = ("recompute", "reuse")
 
+#: executor lowering of the task plan: ``"spmd"`` runs one rank-uniform
+#: program (every rank traces every segment branch, buffers at ring-max
+#: depth — the reference path); ``"mpmd"`` specializes a program per rank
+#: (``plan.specialize``): each rank's column drives its own pruned branch
+#: set under a top-level rank-indexed switch, with the chain ``ppermute``
+#: double-buffered one tick ahead so comm overlaps the next stage compute.
+EXECUTORS = ("spmd", "mpmd")
+
 
 def parse_schedule(schedule: str) -> Tuple[str, int]:
     """Split a schedule string into (base, virtual_stages).
@@ -217,6 +225,16 @@ class ParallelConfig:
     #               plan-allocated residual stash, and Bw re-reads them
     #               instead of re-running the forward (Bw ~ 1 forward of
     #               work instead of 2).  No effect on fused-B schedules.
+    executor: str = "spmd"        # task-plan lowering target (EXECUTORS):
+    #   "spmd" — one rank-uniform program: every segment traces the UNION
+    #            of all ranks' branches and buffers flatten to the ring-max
+    #            depth (the reference path);
+    #   "mpmd" — per-rank specialized programs (plan.specialize): a
+    #            top-level rank-indexed switch dispatches each rank's own
+    #            pruned branch set / slot columns, and the chain ppermute
+    #            is double-buffered one tick ahead (tick t's boundary
+    #            output ships while tick t+1's compute runs).  Bitwise-
+    #            identical to "spmd" by construction.
     remat_layers: bool = False    # nested checkpointing: remat each layer
     #   inside the stage as well, so a backward tick stashes only bf16
     #   layer-boundary activations instead of every layer's fp32 internals
@@ -244,7 +262,29 @@ class ParallelConfig:
         if self.residuals not in RESIDUAL_MODES:
             raise ValueError(f"unknown residuals mode {self.residuals!r}; "
                              f"want one of {RESIDUAL_MODES}")
+        if self.executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {self.executor!r}; "
+                             f"want one of {EXECUTORS}")
         parse_schedule(self.schedule)   # rejects malformed "interleaved:v"
+
+    def advisories(self) -> Tuple[str, ...]:
+        """Config smells worth surfacing before a run (dryrun prints these).
+
+        ``zb`` + ``residuals="recompute"`` prices Bx+Bw at 4 stage-forwards
+        of work per micro vs the fused B's 3, so in low-bubble regimes
+        (small pipe, large n_micro) the split backward does MORE total work
+        than 1F1B saves — the device model shows it losing at pipe=2.
+        ``residuals="reuse"`` drops Bw's recompute and restores the ZB win.
+        """
+        out = []
+        if parse_schedule(self.schedule)[0] == "zb" \
+                and self.residuals == "recompute":
+            out.append(
+                "schedule='zb' with residuals='recompute' pays 2 remat "
+                "forwards per micro (Bx+Bw = 4F vs fused B = 3F) and can be "
+                "SLOWER than 1f1b in low-bubble regimes; set "
+                "residuals='reuse' (true ZB-H1) to drop Bw's recompute.")
+        return tuple(out)
 
     def with_(self, **kw) -> "ParallelConfig":
         return dataclasses.replace(self, **kw)

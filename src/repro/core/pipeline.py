@@ -14,7 +14,15 @@ schedule task table (:mod:`repro.core.schedules`).  The plan is cut into
 *segments* — maximal runs of ticks sharing a branch set — and each segment
 runs its own scan with the ``lax.switch`` pruned to exactly the branches
 that segment uses and the bookkeeping (grad writes, chain permutes, stream
-rotation) elided when the segment provably never needs it.  Each tick, rank
+rotation) elided when the segment provably never needs it.
+``ParallelConfig.executor`` selects the segment lowering: the ``"spmd"``
+reference traces the union branch set with dynamic rank indexing and
+eager end-of-tick chain sends, while ``"mpmd"`` dispatches one
+*specialized* tick body per rank (static columns, per-rank pruned
+branches — ``plan.specialize``'s projection) under a top-level
+rank-indexed switch and double-buffers the chain ``ppermute`` one tick
+ahead so the hop overlaps the next stage compute; the two are
+bitwise-identical.  Each tick, rank
 ``r`` runs at most one task — NOP (bubble), F, fused B, or the
 split-backward pair Bx / Bw — boundary activations move with a
 ``collective-permute`` ring shift directly into plan-allocated *park* slots
@@ -63,7 +71,7 @@ from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ParallelConfig
 from repro.core import checkpointing
 from repro.core import plan as plan_lib
-from repro.core.plan import BWD, BWD_W, BWD_X, FWD, NOP
+from repro.core.plan import BWD, BWD_W, BWD_X, FWD, NOP, pipe_ring_perm
 from repro.core.skip import SkipSpec
 
 PIPE_AXIS = "pipe"
@@ -98,7 +106,7 @@ def _shift_chain(value, n: int, axis: str, *, ring: bool = False):
     if n == 1:
         # single rank: the wraparound hop (chunk c -> c+1) is an identity
         return value if ring else jax.tree.map(jnp.zeros_like, value)
-    perm = [(i, i + 1) for i in range(n - 1)] + ([(n - 1, 0)] if ring else [])
+    perm = pipe_ring_perm(n, ring=ring)
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
 
 
@@ -106,7 +114,7 @@ def _shift_chain_rev(value, n: int, axis: str, *, ring: bool = False):
     """Backward (cotangent) hop: rank j -> j-1 (+ wraparound 0 -> n-1)."""
     if n == 1:
         return value if ring else jax.tree.map(jnp.zeros_like, value)
-    perm = [(i, i - 1) for i in range(1, n)] + ([(0, n - 1)] if ring else [])
+    perm = pipe_ring_perm(n, reverse=True, ring=ring)
     return jax.tree.map(lambda v: jax.lax.ppermute(v, axis, perm), value)
 
 
@@ -296,6 +304,30 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     ``lax.switch`` in each segment contains exactly the branches that
     segment uses.
 
+    ``cfg.executor`` picks the lowering of each segment:
+
+    * ``"spmd"`` (reference): every rank traces the segment's UNION
+      branch set, gathers its plan columns with a dynamic ``[axis_index]``
+      read, and ships its boundary output eagerly at the end of each tick
+      (compute -> send serialized).
+    * ``"mpmd"``: a top-level rank-indexed ``lax.switch`` dispatches one
+      specialized tick body per rank — static column reads, branch sets
+      pruned to exactly the kinds that rank's column contains in the
+      segment (``plan.specialize``'s projection; a rank that is all-F in
+      a window runs branch-free code), buffer writes elided where that
+      rank's columns prove them dead — and the chain ``ppermute`` is
+      double-buffered: a tick's boundary output latches into a send
+      register (``plan.send_slot``) and ships at the TOP of the next
+      tick, so the hop has no data dependency on that tick's compute and
+      overlaps it (``optimization_barrier`` pins the grouping).  The
+      collective skeleton stays rank-uniform outside the switch —
+      collectives inside per-rank branches would deadlock a real device
+      group — and one SPMD executable still allocates ring-max buffers;
+      the per-rank programs *declare* their true footprint
+      (``plan.specialize(tplan, r).buffer_slots()``), which bench/dryrun
+      report.  Identical values flow on identical ticks, so both
+      executors are bitwise-identical in loss and gradients.
+
     Losses accumulate in ascending micro order on the last stage
     (identical in every schedule) and parameter cotangents are collected
     per-micro and reduced in a fixed order (``cfg.grad_reduce ==
@@ -478,13 +510,28 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     has_stash = bool(stash_protos)
 
     # ---- per-segment scan bodies -----------------------------------------
+    # Both executors share one tick body (`rank_tick`): the SPMD reference
+    # path calls it once with dynamic rank indexing and the segment's UNION
+    # branch set; the MPMD path dispatches R specialized instances — static
+    # column reads, per-rank pruned branch sets and buffer-write elision —
+    # under a single top-level rank-indexed lax.switch.  Collectives (chain
+    # permutes, route hops, stream rotation) always stay in the rank-uniform
+    # skeleton OUTSIDE that switch: a collective inside a per-rank branch
+    # would deadlock a real device group.
+    mpmd = cfg.executor == "mpmd"
+    # global ship mask: tick t's skeleton permute carries the latches
+    # written at t-1 (MPMD double buffering, see plan.py)
+    ship_f_tick = np.zeros(tplan.n_ticks, bool)
+    ship_b_tick = np.zeros(tplan.n_ticks, bool)
+    ship_f_tick[1:] = (tplan.send_slot[:-1] >= 0).any(axis=1)
+    ship_b_tick[1:] = (tplan.b_send_slot[:-1] >= 0).any(axis=1)
+
     def make_segment(seg: plan_lib.Segment):
         sl = slice(seg.start, seg.stop)
         kinds = seg.kinds
         has_f = FWD in kinds
         has_bi = any(k in kinds for k in plan_lib.BWD_INPUT_KINDS)
         has_bw = any(k in kinds for k in plan_lib.BWD_WEIGHT_KINDS)
-        has_b = any(k in kinds for k in plan_lib.BWD_KINDS)
         need_park = bool((tplan.park_recv[sl] >= 0).any())
         need_bseed = fb and bool((tplan.b_read[sl] >= 0).any())
         need_brecv = fb and bool((tplan.b_recv[sl] >= 0).any())
@@ -494,12 +541,31 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         need_rw = has_rx and bool((tplan.resid_write[sl] >= 0).any())
         need_rd = reuse and has_stash \
             and bool((tplan.resid_read[sl] >= 0).any())
+        # MPMD: does any tick of this segment ship a latched chain value?
+        # (an arrival implies a ship one tick earlier, so need_park /
+        # need_brecv can never outrun these)
+        need_ship_f = mpmd and bool(ship_f_tick[sl].any())
+        need_ship_b = mpmd and fb and bool(ship_b_tick[sl].any())
+        if mpmd:
+            assert not need_park or need_ship_f
+            assert not need_brecv or need_ship_b
 
-        # branch-index remap: plan kind id -> position in this segment's set
-        remap = {k: i for i, k in enumerate(kinds)}
+        # per-rank specialization tables (MPMD): rank r's branch set over
+        # this segment is EXACTLY the kinds its column contains here
+        if mpmd:
+            rank_kinds = tuple(
+                tuple(sorted(set(int(k) for k in tplan.kind[sl, r])))
+                for r in range(R))
+        else:
+            rank_kinds = (kinds,) * R
+
+        # branch-index remap: plan kind id -> position in the executing
+        # branch set (per rank under MPMD, the union set under SPMD)
         sel = tplan.kind[sl].copy()
-        for k, i in remap.items():
-            sel[tplan.kind[sl] == k] = i
+        for r in range(R):
+            remap_r = {k: i for i, k in enumerate(rank_kinds[r])}
+            for k, i in remap_r.items():
+                sel[tplan.kind[sl, r] == k, r] = i
 
         xs = {
             "t": jnp.arange(seg.start, seg.stop),
@@ -518,6 +584,10 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             xs["rw"] = jnp.asarray(tplan.resid_write[sl])
         if need_rd:
             xs["rd"] = jnp.asarray(tplan.resid_read[sl])
+        if mpmd and has_f:
+            xs["snd"] = jnp.asarray(tplan.send_slot[sl])
+        if mpmd and fb and has_bi:
+            xs["bsnd"] = jnp.asarray(tplan.b_send_slot[sl])
         if streaming:
             xs["ssl"] = jnp.asarray(tplan.stream_slot[sl])
             xs["rot"] = jnp.asarray(tplan.stream_rot[sl])
@@ -541,43 +611,87 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         if rxs and any(rxs.values()):
             xs["routes"] = rxs
 
-        def tick_body(st, xt):
+        def rank_tick(r, st, xt, arr_f, arr_b):
+            """One rank's tick: arrivals -> operands -> task -> commit.
+
+            ``r is None`` is the SPMD reference instance: dynamic
+            ``[idx]`` column reads and the segment's union branch set.  A
+            static ``r`` is rank r's MPMD specialization: static column
+            reads, branch set pruned to exactly the kinds rank r runs in
+            this segment (a single kind dispatches with no switch at
+            all), and buffer writes elided when rank r's columns prove
+            them dead.  ``arr_f`` / ``arr_b`` are this tick's chain
+            arrivals (SPMD: the value permuted at the end of last tick;
+            MPMD: the latch register shipped at the top of this one).
+            Returns ``(out_state, extras)`` with ``extras`` rank-uniform.
+            """
+            static = r is not None
+
+            def col(a):
+                return a[r] if static else a[idx]
+
+            if static:
+                kinds_r = rank_kinds[r]
+                csl = (sl, r)
+                r_park = need_park and bool(
+                    (tplan.park_recv[csl] >= 0).any())
+                r_bseed = need_bseed and bool((tplan.b_read[csl] >= 0).any())
+                r_brecv = need_brecv and bool((tplan.b_recv[csl] >= 0).any())
+                r_x = need_x and bool((tplan.park_read[csl] >= 0).any())
+                r_rx = reuse and has_stash and BWD_X in kinds_r
+                r_rw = need_rw and bool((tplan.resid_write[csl] >= 0).any())
+                r_rd = need_rd and bool((tplan.resid_read[csl] >= 0).any())
+                r_latch_f = has_f and bool((tplan.send_slot[csl] >= 0).any())
+                r_latch_b = fb and has_bi and bool(
+                    (tplan.b_send_slot[csl] >= 0).any())
+            else:
+                kinds_r = kinds
+                r_park, r_bseed, r_brecv = need_park, need_bseed, need_brecv
+                r_x, r_rx, r_rw, r_rd = need_x, has_rx, need_rw, need_rd
+                r_latch_f = r_latch_b = False
+            r_f = FWD in kinds_r
+            r_bi = any(k in kinds_r for k in plan_lib.BWD_INPUT_KINDS)
+            r_bw = any(k in kinds_r for k in plan_lib.BWD_WEIGHT_KINDS)
+            r_b = any(k in kinds_r for k in plan_lib.BWD_KINDS)
+            remap = {k: i for i, k in enumerate(kinds_r)}
+
             t = xt["t"]
-            sel_t = xt["sel"][idx]
-            micro_t = xt["micro"][idx]
-            chunk_t = xt["chunk"][idx]
-            prd = xt["prd"][idx]
+            sel_t = col(xt["sel"])
+            micro_t = col(xt["micro"])
+            chunk_t = col(xt["chunk"])
+            prd = col(xt["prd"])
             is_last_stage = (is_last_rank & (chunk_t == v - 1) if chunked
                              else is_last_rank)
 
             # 1. park ring / route arrivals in their plan-assigned slots
             park = st["park"]
-            if need_park:
-                prs = xt["prs"][idx]
-                park = _masked_write(park, st["f_chain"], prs, prs >= 0)
+            if r_park:
+                prs = col(xt["prs"])
+                park = _masked_write(park, arr_f, prs, prs >= 0)
             rst = {}
             for rt in routes:
                 rx = xt.get("routes", {}).get(rt.key, {})
                 rs = st["routes"][rt.key]
-                entry = {"buf": rs["buf"]}
+                entry = {"buf": rs["buf"], "fly": rs["fly"]}
                 if "recv" in rx:
-                    rc = rx["recv"][idx]
+                    rc = col(rx["recv"])
                     entry["buf"] = _masked_write(rs["buf"], rs["fly"], rc,
                                                  rc >= 0)
                 if fb:
                     entry["gbuf"] = rs["gbuf"]
+                    entry["gfly"] = rs["gfly"]
                     if "g_recv" in rx:
-                        grc = rx["g_recv"][idx]
+                        grc = col(rx["g_recv"])
                         entry["gbuf"] = _masked_write(rs["gbuf"], rs["gfly"],
                                                       grc, grc >= 0)
                 rst[rt.key] = entry
             b_inbox = st.get("b_inbox")
-            if need_brecv:
-                brs = xt["brs"][idx]
-                b_inbox = _masked_write(b_inbox, st["b_chain"], brs, brs >= 0)
+            if r_brecv:
+                brs = col(xt["brs"])
+                b_inbox = _masked_write(b_inbox, arr_b, brs, brs >= 0)
 
             # 2. gather this tick's operands
-            if need_x:
+            if r_x:
                 x_f = _select(prd >= 0, _dyn_read(park, prd),
                               _zeros_of(carry0))
             else:
@@ -588,7 +702,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             for rt in routes:
                 rx = xt.get("routes", {}).get(rt.key, {})
                 if "read" in rx:
-                    rd = rx["read"][idx]
+                    rd = col(rx["read"])
                     skips_in[rt.name] = _select(
                         rd >= 0, _dyn_read(rst[rt.key]["buf"], rd),
                         skips_in[rt.name])
@@ -604,14 +718,14 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             resident = st["resident"]
 
             if fb:
-                if need_bseed:
-                    brd = xt["brd"][idx]
+                if r_bseed:
+                    brd = col(xt["brd"])
                     bseed = _select(brd >= 0, _dyn_read(b_inbox, brd),
                                     _zeros_of(carry0))
                 else:
                     bseed = _zeros_of(carry0)
-                if streaming and has_b:
-                    fsl = xt["fsl"][idx]
+                if streaming and r_b:
+                    fsl = col(xt["fsl"])
                     fresh_b = _dyn_read(st["fs"], fsl)
                 else:
                     fresh_b = fresh_f
@@ -622,14 +736,14 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                 for rt in routes:
                     rx = xt.get("routes", {}).get(rt.key, {})
                     if "g_read" in rx:
-                        gr = rx["g_read"][idx]
+                        gr = col(rx["g_read"])
                         add = _select(gr >= 0,
                                       _dyn_read(rst[rt.key]["gbuf"], gr),
                                       _zeros_of(skip_protos[rt.name]))
                         skip_seeds[rt.name] = jax.tree.map(
                             jnp.add, skip_seeds[rt.name], add)
-                if need_rd:
-                    rd = xt["rd"][idx]
+                if r_rd:
+                    rd = col(xt["rd"])
                     resid_in = [
                         _select(rd >= 0, _dyn_read(bufl, rd),
                                 jnp.zeros(bufl.shape[1:], bufl.dtype))
@@ -650,18 +764,18 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
 
                 def out_zeros():
                     o = {"res": resident}
-                    if has_f:
+                    if r_f:
                         o["carry"] = _zeros_of(carry0)
                         o["skips"] = zeros_skips()
                         o["loss"] = jnp.zeros((), jnp.float32)
-                    if has_bi:
+                    if r_bi:
                         o["b"] = _zeros_of(carry0)
                         o["gskips"] = zeros_skips()
                         o["g_fr"] = _zeros_of(fresh0)
-                    if has_bw:
+                    if r_bw:
                         o["g_p"] = jax.tree.map(jnp.zeros_like, stage_params)
                         o["g_ph"] = jax.tree.map(jnp.zeros_like, head_params)
-                    if has_rx:
+                    if r_rx:
                         o["resid"] = [jnp.zeros(tuple(p.shape),
                                                 jnp.dtype(p.dtype))
                                       for p in stash_protos]
@@ -752,7 +866,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                         _, g_c, g_si, g_fr, _ = vjp_fn(seeds_tuple())
                         o = out_zeros()
                         o.update(b=g_c, gskips=g_si, g_fr=g_fr)
-                        if has_rx:
+                        if r_rx:
                             o["resid"] = [l for l, keep in zip(leaves, mask)
                                           if keep]
                         return o
@@ -775,7 +889,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
 
                 branch_of = {NOP: nop_branch, FWD: f_branch, BWD: b_branch,
                              BWD_X: bx_branch, BWD_W: bw_branch}
-                branches = tuple(branch_of[k] for k in kinds)
+                branches = tuple(branch_of[k] for k in kinds_r)
                 res = (branches[0]() if len(branches) == 1
                        else jax.lax.switch(sel_t, branches))
             else:
@@ -783,7 +897,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                               == remap.get(FWD, -1), t=t, fresh=fresh_f,
                               n_stages=tplan.n_stages, n_micro=m)
                 wrapped = checkpointing.wrap_stage(
-                    lambda p, c, si, r: stage_apply(p, c, si, r, ctx),
+                    lambda p, c, si, rr: stage_apply(p, c, si, rr, ctx),
                     cfg.remat)
 
                 def nop_branch():
@@ -800,7 +914,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                             "res": res_new}
 
                 branch_of = {NOP: nop_branch, FWD: f_branch}
-                branches = tuple(branch_of[k] for k in kinds)
+                branches = tuple(branch_of[k] for k in kinds_r)
                 res = (branches[0]() if len(branches) == 1
                        else jax.lax.switch(sel_t, branches))
 
@@ -808,15 +922,15 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             out = dict(st)
             out["park"] = park
             out["resident"] = res["res"]
-            is_f = sel_t == remap.get(FWD, -1) if has_f else None
+            is_f = sel_t == remap.get(FWD, -1) if r_f else None
             if fb:
-                if has_f:
+                if r_f:
                     out["loss"] = st["loss"] + res["loss"]
                     if streaming:
-                        fsl = xt["fsl"][idx]
+                        fsl = col(xt["fsl"])
                         out["fs"] = _masked_write(st["fs"], fresh_f, fsl,
                                                   is_f & (fsl >= 0))
-                if has_bw:
+                if r_bw:
                     w_sels = [remap[k] for k in plan_lib.BWD_WEIGHT_KINDS
                               if k in remap]
                     is_w = functools.reduce(
@@ -834,12 +948,12 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                                                       res["g_p"])
                         out["g_head"] = jax.tree.map(jnp.add, st["g_head"],
                                                      res["g_ph"])
-                if need_rw:
-                    rw = xt["rw"][idx]
+                if r_rw:
+                    rw = col(xt["rw"])
                     is_x = sel_t == remap[BWD_X]
                     out["resid"] = _masked_write(st["resid"], res["resid"],
                                                  rw, is_x & (rw >= 0))
-                if has_bi:
+                if r_bi:
                     bi_sels = [remap[k] for k in plan_lib.BWD_INPUT_KINDS
                                if k in remap]
                     is_bi = functools.reduce(
@@ -850,29 +964,99 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                     out["igbuf"] = _masked_write(st["igbuf"], res["g_fr"],
                                                  micro_t, ig_pred)
                     out["b_inbox"] = b_inbox
-                    out["b_chain"] = _shift_chain_rev(res["b"], R, axis,
-                                                      ring=chunked)
-                elif need_brecv:
+                    if r_latch_b:
+                        # MPMD: latch the input cotangent into the send
+                        # register; the NEXT tick's skeleton ships it.
+                        bsnd = col(xt["bsnd"])
+                        out["b_chain"] = _select(bsnd >= 0, res["b"],
+                                                 st["b_chain"])
+                elif r_brecv:
                     out["b_inbox"] = b_inbox
             else:
-                if has_f:
+                if r_f:
                     out["outputs"] = _constrain_batch0(
                         _masked_write(st["outputs"], res["carry"], micro_t,
                                       is_f & is_last_rank), lead=1)
-            if has_f:
-                out["f_chain"] = _shift_chain(res["carry"], R, axis,
-                                              ring=chunked)
-
-            # 5. skip-route hops (static single-pair / chain permutes)
+            if r_latch_f:
+                # MPMD: latch this tick's boundary output for the next
+                # tick's overlapped ship (see plan.TaskPlan.send_slot)
+                snd = col(xt["snd"])
+                out["f_chain"] = _select(snd >= 0, res["carry"],
+                                         st["f_chain"])
             if routes:
-                out["routes"] = {}
+                # fresh dict: never mutate st (the MPMD branches all close
+                # over the same state dict)
+                out["routes"] = {rt.key: rst[rt.key] for rt in routes}
+
+            extras = {}
+            if routes:
+                extras["skips"] = (res["skips"] if r_f and has_f
+                                   else zeros_skips())
+                if fb and has_bi:
+                    extras["gskips"] = (res["gskips"] if r_bi
+                                        else zeros_skips())
+            if not mpmd:
+                if has_f:
+                    extras["carry"] = res["carry"]
+                if fb and has_bi:
+                    extras["b"] = res["b"]
+            return out, extras
+
+        def tick_body(st, xt):
+            # --- rank-uniform comm skeleton, part 1: chain arrivals -------
+            if mpmd:
+                # double-buffered ship: the permute reads the latch
+                # registers written LAST tick, so it carries no data
+                # dependency on this tick's compute — XLA's scheduler can
+                # overlap the hop with the stage work below.
+                arr_f = (_shift_chain(st["f_chain"], R, axis, ring=chunked)
+                         if need_ship_f else _zeros_of(carry0))
+                arr_b = None
+                if fb:
+                    arr_b = (_shift_chain_rev(st["b_chain"], R, axis,
+                                              ring=chunked)
+                             if need_ship_b else _zeros_of(carry0))
+                if cfg.overlap and (need_ship_f or need_ship_b):
+                    # pin the overlap: group the in-flight arrivals into
+                    # one scheduling unit issued ahead of the compute, so
+                    # the compiler cannot sink the send back behind it
+                    # (the serialized story cfg.overlap=False ablates to).
+                    if fb:
+                        arr_f, arr_b = _barrier(arr_f, arr_b)
+                    else:
+                        (arr_f,), = (_barrier(arr_f),)
+            else:
+                arr_f = st["f_chain"]
+                arr_b = st.get("b_chain")
+
+            # --- per-rank specialized tick ---------------------------------
+            if mpmd and R > 1:
+                out, extras = jax.lax.switch(
+                    idx, tuple(functools.partial(rank_tick, r)
+                               for r in range(R)), st, xt, arr_f, arr_b)
+            else:
+                out, extras = rank_tick(0 if mpmd else None, st, xt,
+                                        arr_f, arr_b)
+
+            # --- rank-uniform comm skeleton, part 2 ------------------------
+            # SPMD reference: eager chain sends (this tick's outputs enter
+            # the wire immediately, serialized after the compute).
+            if not mpmd:
+                if fb and has_bi:
+                    out["b_chain"] = _shift_chain_rev(extras["b"], R, axis,
+                                                      ring=chunked)
+                if has_f:
+                    out["f_chain"] = _shift_chain(extras["carry"], R, axis,
+                                                  ring=chunked)
+
+            # skip-route hops (static single-pair / chain permutes)
             for rt in routes:
                 rx = xt.get("routes", {}).get(rt.key, {})
-                entry = rst[rt.key]
+                entry = dict(out["routes"][rt.key])
                 if "send" in rx and has_f:
                     sv = rx["send"][idx]
                     val = _select(sv == plan_lib.SEND_STAGE,
-                                  res["skips"][rt.name],
+                                  extras["skips"][rt.name],
                                   _dyn_read(entry["buf"], sv))
                     entry["fly"] = _route_hop(val, rt.fwd_perm, axis)
                 else:
@@ -881,15 +1065,15 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                     if "g_send" in rx and has_bi:
                         gv = rx["g_send"][idx]
                         gval = _select(gv == plan_lib.SEND_STAGE,
-                                       res["gskips"][rt.name],
+                                       extras["gskips"][rt.name],
                                        _dyn_read(entry["gbuf"], gv))
                         entry["gfly"] = _route_hop(gval, rt.bwd_perm, axis)
                     else:
                         entry["gfly"] = st["routes"][rt.key]["gfly"]
                 out["routes"][rt.key] = entry
 
-            # 6. rotate the input stream one rank towards stage 0 on the
-            #    plan-flagged ticks (keeps rotation count == injected micros)
+            # rotate the input stream one rank towards stage 0 on the
+            # plan-flagged ticks (keeps rotation count == injected micros)
             if need_rot:
                 rot = [(i, (i - 1) % R) for i in range(R)]
                 spun = jax.tree.map(
@@ -992,7 +1176,9 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
     ``cfg.residuals="reuse"`` lowers the Bx->Bw residual-stash events
     (true ZB-H1: Bw re-reads what Bx materialized instead of recomputing);
     pass a dict as ``resid_info`` to receive the stash geometry at trace
-    time.
+    time.  ``cfg.executor`` picks the SPMD reference lowering or the MPMD
+    per-rank specialization (bitwise-identical; see
+    :func:`run_pipeline_tasks`).
     """
     n, m = cfg.pipe, cfg.n_micro
     v = cfg.virtual_stages

@@ -71,9 +71,25 @@ A plan carries these event families, all resolved at lowering time:
   the segment provably never needs it.  All-rank-NOP ticks are dropped
   entirely at lowering time.
 
+* **chain double buffering** (``send_slot`` / ``b_send_slot``): the clock
+  cycle makes every ring send known one tick ahead, so the MPMD executor
+  latches a tick's boundary output (the forward carry on ``send_slot``
+  ticks, the ``B``/``Bx`` input cotangent on ``b_send_slot`` ticks) into
+  a depth-1 send register and ships it at the TOP of the *next* tick —
+  the ``ppermute`` then has no data dependency on that tick's stage
+  compute, so XLA's scheduler can overlap comm with compute instead of
+  serializing compute -> send.  Arrival ticks are unchanged (producer's
+  tick + 1), so the values that park are bitwise the ones the eager send
+  would have delivered.  The columns hold ``0`` (the register slot — one
+  suffices, a latch written at the bottom of tick ``t`` is consumed at
+  the top of ``t+1`` before the next write) on shipping ticks and ``-1``
+  elsewhere; the last global stage never ships forward, stage 0 never
+  ships backward.
+
 Every array is ``[n_ticks, n_ranks]`` host-side numpy, turned into
 constants of the compiled program; nothing about the order is decided at
-runtime.
+runtime.  :func:`specialize` projects the whole plan onto one rank's
+column — the MPMD lowering unit.
 """
 from __future__ import annotations
 
@@ -106,6 +122,23 @@ MAX_SEGMENTS = 8
 # THIS tick (skips_out in forward routes, the VJP's skip cotangent in
 # backward routes) instead of a parked buffer slot.
 SEND_STAGE = -2
+
+
+def pipe_ring_perm(n: int, *, reverse: bool = False,
+                   ring: bool = False) -> list:
+    """Static ppermute pairs for the pipeline chain on ``n`` pipe ranks.
+
+    Forward: ``j -> j+1`` (the boundary-activation hop); ``reverse``:
+    ``j -> j-1`` (the cotangent hop).  ``ring`` adds the wraparound pair
+    (last -> first, or first -> last reversed) that interleaved chunk
+    boundaries ride.  The pipeline executor and any tool reasoning about
+    chain collectives (dryrun comm accounting, launch.mesh, tests) share
+    this one definition so the wire topology cannot drift between them.
+    """
+    if reverse:
+        return [(i, i - 1) for i in range(1, n)] \
+            + ([(0, n - 1)] if ring else [])
+    return [(i, i + 1) for i in range(n - 1)] + ([(n - 1, 0)] if ring else [])
 
 
 @dataclass(frozen=True)
@@ -165,6 +198,8 @@ class TaskPlan:
     fs_slot: np.ndarray       # [T, R] stream-stash slot (F write, B read); -1
     stream_slot: np.ndarray   # [T] stream shard slot rank 0 consumes; -1
     stream_rot: np.ndarray    # [T] bool: rotate the input stream after tick t
+    send_slot: np.ndarray     # [T, R] latch fwd carry for next-tick ship; -1
+    b_send_slot: np.ndarray   # [T, R] latch bwd cotangent for next ship; -1
     segments: Tuple[Segment, ...]
     n_ticks: int
     n_stages: int             # GLOBAL stages (= n_ranks * n_chunks)
@@ -176,6 +211,8 @@ class TaskPlan:
     fs_depth: int
     per_stage_stash: Tuple[int, ...]   # schedule-level bound (peak_stash/rank)
     per_stage_park: Tuple[int, ...]    # donated park high-water per rank
+    per_stage_b_inbox: Tuple[int, ...] = ()   # bwd-inbox high-water per rank
+    per_stage_fs: Tuple[int, ...] = ()        # stream-stash high-water per rank
     has_backward: bool = True
     routes: Tuple[RoutePlan, ...] = ()
     # --- split-backward residual reuse (ZB-H1, residuals="reuse") ---------
@@ -395,6 +432,114 @@ def _segments(kind: np.ndarray) -> Tuple[Segment, ...]:
     return tuple(Segment(s, e, tuple(sorted(ks))) for s, e, ks in segs)
 
 
+# ---------------------------------------------------------------------------
+# MPMD specialization: one rank's column of the plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RankProgram:
+    """The plan projected onto ONE rank — the MPMD lowering unit.
+
+    Where the SPMD plan flattens every per-rank quantity to the ring max
+    (uniform buffers, union branch sets), a rank program carries exactly
+    what *this* rank's column needs: its own tick kinds and slot columns,
+    buffer depths equal to its own slot high-water (1F1B's rank 0 parks 0
+    slots, not ``max_j``), and segments cut along ITS kind runs — a rank
+    whose column is all-F in a window gets a branch-free program there.
+
+    The executor dispatches the per-rank programs under one top-level
+    rank-indexed ``lax.switch`` inside the shared ``shard_map`` body; the
+    collective skeleton (chain / route permutes, stream rotation) stays
+    rank-uniform OUTSIDE the switch — collectives inside per-rank branches
+    would deadlock a real device group, so only pure compute specializes.
+    One SPMD executable must still physically allocate the ring-max
+    buffers; the per-rank depths here are the footprint each rank's
+    program *declares* (and a one-program-per-host MPMD deployment would
+    allocate), which the bench / dryrun report per rank.
+    """
+    rank: int
+    n_ranks: int
+    kind: np.ndarray          # [T] this rank's task kind per tick
+    micro: np.ndarray         # [T]
+    chunk: np.ndarray         # [T]
+    park_recv: np.ndarray     # [T] slot columns, already rank-local: the
+    park_read: np.ndarray     # [T] free-list allocator runs one pool per
+    b_recv: np.ndarray        # [T] rank, so every slot index in a column
+    b_read: np.ndarray        # [T] is < the matching per-rank depth below
+    fs_slot: np.ndarray       # [T]
+    send_slot: np.ndarray     # [T] latch fwd carry for next-tick ship; -1
+    b_send_slot: np.ndarray   # [T]
+    resid_write: Optional[np.ndarray]   # [T] (reuse plans only)
+    resid_read: Optional[np.ndarray]    # [T]
+    segments: Tuple[Segment, ...]       # cuts along THIS rank's kind runs
+    n_ticks: int
+    park_depth: int           # this rank's park high-water (exact)
+    b_inbox_depth: int
+    fs_depth: int
+    resid_depth: int
+    residuals: str
+
+    def branches_in(self, start: int, stop: int) -> Tuple[int, ...]:
+        """Exact branch set of this rank's column over ticks [start, stop)."""
+        return tuple(sorted(set(int(k) for k in self.kind[start:stop])))
+
+    def buffer_slots(self) -> Dict[str, int]:
+        """Slot counts per buffer family this rank's program declares."""
+        return {"park": self.park_depth, "b_inbox": self.b_inbox_depth,
+                "fs": self.fs_depth, "resid": self.resid_depth}
+
+
+def specialize(tplan: TaskPlan, rank: int) -> RankProgram:
+    """Project the global plan onto ``rank``'s column.
+
+    Slot indices need no renumbering: the plan's free-list allocator
+    already runs one pool per rank, so each column's indices are dense in
+    ``[0, per_rank_depth)``.  Segments are recomputed from the single
+    column, so a window where this rank runs only one kind becomes a
+    branch-free segment even when other ranks mix kinds there.
+    """
+    if not 0 <= rank < tplan.n_ranks:
+        raise ValueError(f"rank {rank} out of range (n_ranks="
+                         f"{tplan.n_ranks})")
+    r = rank
+
+    def col(a):
+        return None if a is None else np.ascontiguousarray(a[:, r])
+
+    def depth_of(per_stage, fallback):
+        return int(per_stage[r]) if len(per_stage) == tplan.n_ranks \
+            else fallback
+
+    prog = RankProgram(
+        rank=r, n_ranks=tplan.n_ranks,
+        kind=col(tplan.kind), micro=col(tplan.micro), chunk=col(tplan.chunk),
+        park_recv=col(tplan.park_recv), park_read=col(tplan.park_read),
+        b_recv=col(tplan.b_recv), b_read=col(tplan.b_read),
+        fs_slot=col(tplan.fs_slot),
+        send_slot=col(tplan.send_slot), b_send_slot=col(tplan.b_send_slot),
+        resid_write=col(tplan.resid_write), resid_read=col(tplan.resid_read),
+        segments=_segments(tplan.kind[:, r:r + 1]),
+        n_ticks=tplan.n_ticks,
+        park_depth=depth_of(tplan.per_stage_park, tplan.park_depth),
+        b_inbox_depth=depth_of(tplan.per_stage_b_inbox, tplan.b_inbox_depth),
+        fs_depth=depth_of(tplan.per_stage_fs, tplan.fs_depth),
+        resid_depth=depth_of(tplan.per_stage_resid, tplan.resid_depth),
+        residuals=tplan.residuals)
+    for name, column, depth in (
+            ("park", prog.park_recv, prog.park_depth),
+            ("park", prog.park_read, prog.park_depth),
+            ("b_inbox", prog.b_recv, prog.b_inbox_depth),
+            ("b_inbox", prog.b_read, prog.b_inbox_depth),
+            ("fs", prog.fs_slot, prog.fs_depth),
+            ("resid", prog.resid_write, prog.resid_depth),
+            ("resid", prog.resid_read, prog.resid_depth)):
+        if column is not None and column.size and int(column.max()) >= 0:
+            assert int(column.max()) < depth, \
+                (f"rank {r}: {name} slot {int(column.max())} outside the "
+                 f"declared depth {depth}")
+    return prog
+
+
 def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                 ranks: Optional[int] = None,
                 skips: Sequence[SkipSpec] = (), portals: bool = True,
@@ -465,13 +610,14 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
 
     # --- backward inbox: B(i,s+1)'s cotangent parks until B/Bx (and Bw) ---
     b_depth = 1
+    b_high = [0] * R
     if not forward_only:
         b_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
         for i in range(m):
             for s in range(n - 1):
                 arrive = ix.b[(i, s + 1)] + 1
                 b_iv[s % R].append((arrive, ix.last_b(i, s), (i, s)))
-        b_assign, b_depth, _ = _alloc_intervals(b_iv)
+        b_assign, b_depth, b_high = _alloc_intervals(b_iv)
         for i in range(m):
             for s in range(n - 1):
                 slot = b_assign[(i, s)]
@@ -481,18 +627,33 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
 
     # --- stream stash: every F parks its fresh slice for the backward -----
     fs_depth = 1
+    fs_high = [0] * R
     if not forward_only:
         fs_iv: List[List[Tuple[int, int, object]]] = [[] for _ in range(R)]
         for i in range(m):
             for s in range(n):
                 fs_iv[s % R].append((ix.f[(i, s)], ix.last_b(i, s), (i, s)))
-        fs_assign, fs_depth, _ = _alloc_intervals(fs_iv)
+        fs_assign, fs_depth, fs_high = _alloc_intervals(fs_iv)
         for i in range(m):
             for s in range(n):
                 slot = fs_assign[(i, s)]
                 fs_slot[ix.f[(i, s)], s % R] = slot
                 for tb in ix.b_ticks(i, s):
                     fs_slot[tb, s % R] = slot
+
+    # --- chain send latches (MPMD double buffering): a tick whose output
+    # crosses the ring latches it into the depth-1 send register; the
+    # executor ships the register at the top of the NEXT tick, overlapping
+    # the permute with that tick's compute.  The last global stage never
+    # ships forward; stage 0 never ships a cotangent.
+    send_slot = np.full((T, R), -1, np.int32)
+    b_send_slot = np.full((T, R), -1, np.int32)
+    for i in range(m):
+        for s in range(n - 1):
+            send_slot[ix.f[(i, s)], s % R] = 0
+        if not forward_only:
+            for s in range(1, n):
+                b_send_slot[ix.b[(i, s)], s % R] = 0
 
     # --- residual stash: BWD_X parks its vjp residuals until BWD_W --------
     resid_write = np.full((T, R), -1, np.int32)
@@ -524,10 +685,13 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
     routes = _lower_routes(ix, T, m, R, skips, portals,
                            has_backward=not forward_only)
     return TaskPlan(kind, micro, chunk, park_recv, park_read, b_recv, b_read,
-                    fs_slot, stream_slot, stream_rot, _segments(kind),
+                    fs_slot, stream_slot, stream_rot, send_slot, b_send_slot,
+                    _segments(kind),
                     T, n, R, m, v,
                     park_depth, max(b_depth, 1), max(fs_depth, 1),
                     per_stage_stash, tuple(park_high),
+                    per_stage_b_inbox=tuple(b_high),
+                    per_stage_fs=tuple(fs_high),
                     has_backward=not forward_only, routes=routes,
                     residuals=residuals, resid_write=resid_write,
                     resid_read=resid_read, resid_depth=resid_depth,
@@ -555,20 +719,25 @@ def schedule_table(schedule: str, m: int, n: int):
 
 def schedule_bubble(schedule: str, m: int, n: int,
                     *, residuals: str = "recompute",
-                    remat: str = "dots") -> float:
+                    remat: str = "dots",
+                    executor: str = "spmd",
+                    comm_cost: float = 0.0) -> float:
     """Dedicated-device bubble fraction of the named schedule's table
     (cost-weighted critical-path idle share) — the dry-run cost model's
     pipeline-efficiency term.  ``residuals`` selects the split-backward
     pricing (``"reuse"`` drops Bw's recompute — unless ``remat="full"``,
-    whose stash is empty and still recomputes).  Returns 0 for a
-    single-stage pipeline."""
+    whose stash is empty and still recomputes); ``comm_cost`` prices one
+    chain hop and ``executor`` decides whether it overlaps compute
+    (``"mpmd"`` double buffering) or serializes after the producing task
+    (``"spmd"``).  Returns 0 for a single-stage pipeline."""
     if n <= 1:
         return 0.0
     table, n_stages, ranks = schedule_table(schedule, m, n)
     return schedules.device_bubble_fraction(
         table, ranks,
         schedules.default_task_cost(n_stages, ranks, residuals=residuals,
-                                    remat=remat))
+                                    remat=remat),
+        comm_cost=comm_cost, overlap_comm=executor == "mpmd")
 
 
 def plan_for(schedule: str, m: int, n: int, *,

@@ -391,15 +391,31 @@ def default_task_cost(n_stages: int, ranks: Optional[int] = None,
 
 
 def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
-                          cost_of=None) -> Tuple[float, List[float]]:
+                          cost_of=None, *, comm_cost: float = 0.0,
+                          overlap_comm: bool = False
+                          ) -> Tuple[float, List[float]]:
     """Event-driven critical path of a table on ``ranks`` DEDICATED devices.
 
     Each rank executes its tasks in table order; a task starts when its
     rank is free AND its cross-stage dependencies (F chain, backward
-    chain, Bw-after-Bx) have finished — i.e. the asynchronous execution a
-    real accelerator group gives the same issue order, with zero comm
-    latency.  Returns ``(t_end, per_rank_busy)``; the pipeline bubble a
-    device group actually pays is ``1 - sum(busy) / (ranks * t_end)``.
+    chain, Bw-after-Bx) have finished.  Returns ``(t_end,
+    per_rank_busy)``; the pipeline bubble a device group actually pays is
+    ``1 - sum(busy) / (ranks * t_end)``.
+
+    ``comm_cost`` prices one cross-RANK boundary hop (chain ``ppermute``)
+    in the same stage-forward units as ``cost_of`` (0 = the legacy
+    zero-latency clock; co-resident interleaved chunks hop for free).
+    ``overlap_comm`` selects the executor's comm story:
+
+    * ``False`` (SPMD reference): the send is issued at the end of the
+      producing task on the compute stream — the producer's rank is
+      BLOCKED for ``comm_cost`` after the task, and the consumer sees
+      ``finish + comm_cost``.
+    * ``True`` (MPMD double buffering): the send is latched and shipped
+      one tick ahead, overlapping the producer's next compute — the
+      consumer still sees ``finish + comm_cost``, but the producer's rank
+      is free immediately.  Pointwise no later than the serialized story,
+      so the mpmd model is <= the spmd model for every table.
 
     This is the schedule-comparison clock for the speed tables: a
     single-host CPU bench timeshares every "device" over the same cores,
@@ -415,6 +431,13 @@ def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
     finish: dict = {}
     rank_free = [0.0] * ranks
     busy = [0.0] * ranks
+
+    def hop(a: Task, b_stage: int) -> float:
+        """Comm latency from task ``a``'s stage to ``b_stage``."""
+        if a.stage % ranks == b_stage % ranks:
+            return 0.0             # co-resident chunk: no collective hop
+        return comm_cost
+
     for tick in table:
         for task in sorted(tick):
             if task.kind == "R":
@@ -431,18 +454,34 @@ def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
             elif task.kind == "Bw":
                 deps.append(Task("Bx", task.micro, task.stage))
             r = task.stage % ranks
-            start = max([rank_free[r]] + [finish[d] for d in deps])
+            start = max([rank_free[r]]
+                        + [finish[d] + hop(d, task.stage) for d in deps])
             c = cost_of(task)
             finish[task] = start + c
             rank_free[r] = start + c
             busy[r] += c
+            if comm_cost and not overlap_comm:
+                # serialized send: the producer's compute stream carries
+                # the hop, blocking the rank until the wire drains.  The
+                # stall counts as bubble (busy stays compute-only), so the
+                # spmd bubble fraction >= the mpmd one and a step-time
+                # estimate dividing by (1 - bubble) moves the right way.
+                ships = (task.kind == "F" and task.stage < n_stages - 1
+                         and (task.stage + 1) % ranks != r) \
+                    or (task.kind in _BWD_CHAIN and task.stage > 0
+                        and (task.stage - 1) % ranks != r)
+                if ships:
+                    rank_free[r] += comm_cost
     return max(rank_free, default=0.0), busy
 
 
 def device_bubble_fraction(table: Sequence[Sequence[Task]], ranks: int,
-                           cost_of=None) -> float:
+                           cost_of=None, *, comm_cost: float = 0.0,
+                           overlap_comm: bool = False) -> float:
     """Idle share of the dedicated-device critical path (cost-weighted)."""
-    t_end, busy = simulate_device_times(table, ranks, cost_of)
+    t_end, busy = simulate_device_times(table, ranks, cost_of,
+                                        comm_cost=comm_cost,
+                                        overlap_comm=overlap_comm)
     if t_end <= 0:
         return 0.0
     return 1.0 - sum(busy) / (ranks * t_end)

@@ -27,9 +27,10 @@ import numpy as np
 from repro import compat
 from repro.compat import set_mesh
 from repro import configs
-from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.base import SHAPES_BY_NAME, V5E
 from repro.core import plan as plan_lib
 from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as sharding_lib
 from repro.launch import steps
 from repro.models.lm import LMModel
 from repro.roofline import analysis
@@ -73,11 +74,33 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     # and GPipe share a critical path; interleaved shrinks the fill by
     # ~1/v; zb fills bubbles with Bw work and, under residuals="reuse",
     # skips Bw's recompute entirely) — not by the GPipe clock
-    # unconditionally.
+    # unconditionally.  The chain-hop comm term is priced from the
+    # roofline constants (boundary bytes over ICI vs one stage-forward of
+    # compute) and overlaps the next tick's compute under the mpmd
+    # executor's double buffering, serializes after the producing task
+    # under spmd.
+    comm_units = 0.0
+    buf_report = {}
+    if shape.kind == "train" and pcfg.pipe > 1:
+        mbg = shape.global_batch // pcfg.n_micro
+        act_bytes = 2 if pcfg.activation_dtype == "bfloat16" else 4
+        carry_bytes = mbg * shape.seq_len * arch.d_model * act_bytes
+        # one stage-forward of compute per micro, in seconds (model FLOPs
+        # are fwd+bwd ~ 3x fwd; a stage holds 1/pipe of the layers)
+        fwd_unit_s = (analysis.model_flops_for(arch, shape) / 3.0
+                      / pcfg.n_micro / pcfg.pipe) / V5E.peak_flops_bf16 \
+            / max(pcfg.tp * pcfg.data * pcfg.pod, 1)
+        hop_s = carry_bytes / max(pcfg.data * pcfg.pod, 1) / V5E.ici_bw
+        comm_units = hop_s / fwd_unit_s if fwd_unit_s > 0 else 0.0
+        tplan = plan_lib.plan_for(pcfg.schedule, pcfg.n_micro, pcfg.pipe,
+                                  residuals=pcfg.residuals)
+        buf_report = sharding_lib.per_rank_buffer_bytes(tplan, carry_bytes)
     bubble = (plan_lib.schedule_bubble(pcfg.schedule, pcfg.n_micro,
                                        pcfg.pipe,
                                        residuals=pcfg.residuals,
-                                       remat=pcfg.remat)
+                                       remat=pcfg.remat,
+                                       executor=pcfg.executor,
+                                       comm_cost=comm_units)
               if shape.kind == "train" else 0.0)
     rep = analysis.RooflineReport(
         arch=arch_name, shape=shape_name,
@@ -89,7 +112,8 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         xla_flops=float(ca.get("flops", 0.0)),
         schedule=pcfg.schedule, bubble_fraction=round(bubble, 4),
         notes=f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
-              f"sched={pcfg.schedule} residuals={pcfg.residuals}")
+              f"sched={pcfg.schedule} residuals={pcfg.residuals} "
+              f"executor={pcfg.executor}")
     out = rep.to_dict()
     out.update({
         "skipped": False,
@@ -103,11 +127,17 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         },
         "pcfg": {"pipe": pcfg.pipe, "tp": pcfg.tp, "data": pcfg.data,
                  "pod": pcfg.pod, "n_micro": pcfg.n_micro,
-                 "remat": pcfg.remat, "residuals": pcfg.residuals},
+                 "remat": pcfg.remat, "residuals": pcfg.residuals,
+                 "executor": pcfg.executor},
+        "comm_cost_units": round(comm_units, 4),
+        "advisories": list(pcfg.advisories()),
     })
+    if buf_report:
+        out["tick_buffers"] = buf_report
     if verbose:
         print(f"[dryrun] {arch_name}/{shape_name} mesh={out['mesh']} "
               f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
+              f"executor={pcfg.executor} "
               f"compile={out['compile_s']}s "
               f"mem/dev={per_dev_bytes/2**30:.2f}GiB "
               f"t=(c {rep.t_compute*1e3:.1f} | m {rep.t_memory*1e3:.1f} | "
@@ -115,6 +145,23 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
               f"bottleneck={rep.bottleneck} "
               f"roofline={rep.roofline_fraction:.3f}")
         print(f"[dryrun]   memory_analysis: {mem}")
+        if buf_report:
+            # per-rank (NOT uniform-max): what each rank's specialized
+            # program declares for its park/inbox/residual slots.  The
+            # byte figures cover park + inbox only — residual-slot bytes
+            # are trace-time geometry (resid_info via build_train_step /
+            # the schedules bench), so slots are printed but not priced.
+            park = buf_report["per_rank_park_slots"]
+            resid = buf_report["per_rank_resid_slots"]
+            bb = buf_report["per_rank_buffer_bytes"]
+            print(f"[dryrun]   per-rank park slots={park} "
+                  f"resid slots={resid} (resid bytes are trace-time) "
+                  f"park+inbox MiB={[round(b / 2**20, 1) for b in bb]} "
+                  f"(uniform-max/rank "
+                  f"{buf_report['uniform_max_buffer_bytes_per_rank'] / 2**20:.1f}"
+                  f" MiB)")
+        for msg in pcfg.advisories():
+            print(f"[dryrun]   ADVISORY: {msg}")
     if keep_hlo:
         out["hlo"] = hlo
     return out

@@ -62,6 +62,12 @@ def make_arch_mesh(pcfg: ParallelConfig, *, base: Optional[Mesh] = None) -> Mesh
                                 axis_types=(AxisType.Auto,) * 4)
 
 
+# The chain-collective topology lives next to the plan IR (one definition
+# for the executor, comm accounting, and tests); re-exported here because
+# mesh construction is where device-topology questions get asked first.
+from repro.core.plan import pipe_ring_perm  # noqa: E402,F401
+
+
 def make_smoke_mesh(pcfg: ParallelConfig) -> Mesh:
     """Mesh over however many local devices the reduced configs use."""
     n = pcfg.pod * pcfg.data * pcfg.pipe * pcfg.tp

@@ -169,6 +169,38 @@ def gather_stage_weights(stages, mesh: Mesh):
     return jtu.tree_map_with_path(one, stages)
 
 
+def per_rank_buffer_bytes(tplan, carry_bytes: int,
+                          resid_bytes_per_slot: int = 0) -> dict:
+    """Donated tick-loop buffer accounting per pipe rank, from the plan.
+
+    Returns, for each rank, the bytes its SPECIALIZED program declares
+    (``plan.specialize``: the rank's own park / backward-inbox / residual
+    slot high-water x bytes per slot) next to the flattened SPMD
+    allocation (every rank at the ring-max depth).  The dryrun roofline
+    and the schedules bench report both so the MPMD win — 1F1B's rank 0
+    parks 0 slots, not ``max_j`` — is visible per rank instead of being
+    averaged away.
+    """
+    from repro.core import plan as plan_lib
+
+    progs = [plan_lib.specialize(tplan, r) for r in range(tplan.n_ranks)]
+    per_rank = [p.park_depth * carry_bytes + p.b_inbox_depth * carry_bytes
+                + p.resid_depth * resid_bytes_per_slot for p in progs]
+    uniform = tplan.n_ranks * (
+        (tplan.park_depth + tplan.b_inbox_depth) * carry_bytes
+        + tplan.resid_depth * resid_bytes_per_slot)
+    return {
+        "per_rank_park_slots": [p.park_depth for p in progs],
+        "per_rank_resid_slots": [p.resid_depth for p in progs],
+        "per_rank_buffer_bytes": per_rank,
+        "uniform_max_buffer_bytes_per_rank": (
+            (tplan.park_depth + tplan.b_inbox_depth) * carry_bytes
+            + tplan.resid_depth * resid_bytes_per_slot),
+        "total_buffer_bytes": {"mpmd_declared": sum(per_rank),
+                               "spmd_uniform": uniform},
+    }
+
+
 def named(tree_specs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))

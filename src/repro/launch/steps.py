@@ -7,6 +7,7 @@ the (pod, data, tp) axes; the pipeline shard_map owns ``pipe``.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -46,8 +47,18 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
     turns on ZB-H1 residual reuse for split-backward schedules; pass a
     dict as ``resid_info`` to receive the residual-stash geometry (leaf
     shapes, bytes per slot) when the step first traces.
+    ``pcfg.executor`` selects the plan lowering: ``"spmd"`` (rank-uniform
+    reference) or ``"mpmd"`` (per-rank specialized programs with the
+    chain permute double-buffered one tick ahead — bitwise-identical
+    results, see :func:`repro.core.pipeline.run_pipeline_tasks`).
     """
     ocfg = ocfg or optim.OptimizerConfig()
+    # Gate known config smells at selection time: zb + recompute prices
+    # Bx+Bw at 4 stage-forwards per micro (vs fused B's 3), which the
+    # device model shows LOSING to 1f1b in low-bubble regimes; the
+    # advisory recommends residuals="reuse" (true ZB-H1).
+    for msg in pcfg.advisories():
+        warnings.warn(msg, stacklevel=2)
     if pcfg.schedule_base in ("1f1b", "gpipe_tasked", "interleaved", "zb"):
         return _build_train_step_fused(model, pcfg, mesh, shape, ocfg,
                                        resid_info=resid_info)

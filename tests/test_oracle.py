@@ -19,9 +19,18 @@ from conftest import run_subprocess
 # Per-dtype allclose tolerances: the oracle and the pipeline evaluate the
 # same math on different graphs (fused remat + buffered operands vs one
 # autodiff pass), so sums reassociate.
+#
+# The whole suite honours REPRO_EXECUTOR ("spmd" default / "mpmd"): the CI
+# executor-matrix leg reruns every oracle comparison with the fused side
+# lowered to per-rank specialized programs, so the MPMD path is checked
+# against the independent single-device reference, not just against SPMD.
 COMMON = """
+import os
 import numpy as np
 import jax, jax.numpy as jnp
+
+EXECUTOR = os.environ.get("REPRO_EXECUTOR", "spmd")
+print("oracle executor:", EXECUTOR)
 
 TOL = {"float32": dict(rtol=5e-4, atol=5e-5),
        "bfloat16": dict(rtol=2e-2, atol=2e-2)}
@@ -102,7 +111,7 @@ def oracle_loss_fn(model, m):
 def fused_lg(schedule, m, residuals, remat, remat_last_micro=False):
     pcfg = ParallelConfig(pipe=2, tp=1, data=1, pod=1, n_micro=m,
                           remat=remat, schedule=schedule,
-                          residuals=residuals,
+                          residuals=residuals, executor=EXECUTOR,
                           remat_last_micro=remat_last_micro)
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
@@ -182,7 +191,8 @@ key = jax.random.PRNGKey(0)
 shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
 m = 4
 pcfg = ParallelConfig(pipe=2, tp=1, data=1, pod=1, n_micro=m,
-                      schedule="zb", residuals="reuse", remat="dots")
+                      schedule="zb", residuals="reuse", remat="dots",
+                      executor=EXECUTOR)
 mesh = mesh_lib.make_smoke_mesh(pcfg)
 model = LMModel(arch, pcfg, dtype=jnp.float32)
 params = model.init(key)
@@ -265,7 +275,7 @@ results = {}
 for schedule, residuals, remat in MATRIX:
     pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
                           portals=True, remat=remat, schedule=schedule,
-                          residuals=residuals)
+                          residuals=residuals, executor=EXECUTOR)
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     umodel = UNetModel(ucfg, pipe * pcfg.virtual_stages)
     uparams = umodel.init(jax.random.PRNGKey(0))

@@ -247,11 +247,27 @@ def test_config_validates_at_parse_time():
         ParallelConfig(residuals="reuse_maybe")
     with pytest.raises(ValueError, match="virtual"):
         ParallelConfig(schedule="interleaved:0")
+    with pytest.raises(ValueError, match="executor"):
+        ParallelConfig(executor="simd")
     # the valid cross-product constructs
     for remat in ("none", "full", "dots", "dots_no_batch"):
         for residuals in ("recompute", "reuse"):
-            cfg = ParallelConfig(remat=remat, residuals=residuals)
-            assert cfg.remat == remat and cfg.residuals == residuals
+            for executor in ("spmd", "mpmd"):
+                cfg = ParallelConfig(remat=remat, residuals=residuals,
+                                     executor=executor)
+                assert cfg.remat == remat and cfg.residuals == residuals
+                assert cfg.executor == executor
+
+
+def test_zb_recompute_advisory():
+    """The perf gate (satellite): zb + recompute carries an advisory
+    recommending residuals="reuse"; zb + reuse and every other schedule
+    are clean."""
+    assert any("reuse" in a
+               for a in ParallelConfig(schedule="zb").advisories())
+    assert ParallelConfig(schedule="zb", residuals="reuse",
+                          remat="dots").advisories() == ()
+    assert ParallelConfig(schedule="1f1b").advisories() == ()
 
 
 def test_policies_match_checkpointing():

@@ -223,3 +223,32 @@ def test_backward_is_reverse_clock_cycle(m_n):
     for k, tick in enumerate(S.gpipe_backward_cycles(m, n, checkpoint=False)):
         for t in tick:
             assert (m - 1 - t.micro) + (n - 1 - t.stage) == k
+
+
+@given(mn, st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_comm_term_overlap_dominance(m_n, comm):
+    """The device model's comm term: for every table, the overlapped
+    (mpmd double-buffered) critical path is <= the serialized (spmd) one,
+    both are >= the zero-comm legacy clock, and comm_cost=0 reduces to it
+    exactly.  Busy time stays compute-only, so the spmd bubble (comm
+    stalls included as idle) is >= the mpmd bubble."""
+    m, n = m_n
+    for table in (S.one_f_one_b_schedule(m, n), S.zb_schedule(m, n),
+                  S.gpipe_schedule(m, n, checkpoint=False)):
+        t0, busy0 = S.simulate_device_times(table, n)
+        tz, busyz = S.simulate_device_times(table, n, comm_cost=0.0,
+                                            overlap_comm=True)
+        assert t0 == pytest.approx(tz) and busy0 == pytest.approx(busyz)
+        ts, busys = S.simulate_device_times(table, n, comm_cost=comm)
+        tm, busym = S.simulate_device_times(table, n, comm_cost=comm,
+                                            overlap_comm=True)
+        assert tm <= ts + 1e-9
+        assert t0 <= tm + 1e-9
+        # busy is compute-only in both stories
+        assert busys == pytest.approx(busy0)
+        assert busym == pytest.approx(busy0)
+        if n > 1:
+            assert S.device_bubble_fraction(table, n, comm_cost=comm,
+                                            overlap_comm=True) \
+                <= S.device_bubble_fraction(table, n, comm_cost=comm) + 1e-9

@@ -1,0 +1,154 @@
+"""MPMD specialization invariants (``plan.specialize``).
+
+Hypothesis suites prove, for random schedules and (m, n, v) shapes, that
+each rank's specialized program is a faithful projection of the global
+plan:
+
+* **branch pruning is exact** — for every rank and every segment (both
+  the rank program's own segment cuts and the global executor segments),
+  the specialized branch set equals the set of kinds actually present in
+  that rank's column over the window: nothing a rank never runs is
+  traced, nothing it runs is missing.
+* **per-rank buffer depths are the schedule predictions** — a rank
+  program's park / residual depth equals ``schedules.peak_park`` /
+  ``schedules.peak_residuals`` restricted to that rank (so 1F1B's rank 0
+  declares 0 park slots while the SPMD plan flattens to the ring max),
+  and every slot index in the rank's columns stays below its declared
+  depth.
+* **double-buffer latch columns are consistent** — ``send_slot`` marks
+  exactly the F ticks whose global stage ships a boundary output
+  (``stage < n_stages - 1``), ``b_send_slot`` exactly the backward-chain
+  ticks with ``stage > 0``, and every park / inbox arrival is preceded by
+  a matching latch one tick earlier (the arrival an overlapped ship can
+  deliver).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan as PL
+from repro.core import schedules as S
+
+mn = st.tuples(st.integers(1, 12), st.integers(1, 6))
+schedule_names = st.sampled_from(["gpipe_tasked", "1f1b", "zb"])
+
+
+def build(schedule, m, n, residuals="recompute"):
+    if schedule == "interleaved:2":
+        m = max(1, (m // n) * n) if m >= n else n   # needs m % n == 0
+    return PL.plan_for(schedule, m, n, residuals=residuals), m
+
+
+@given(schedule_names, mn)
+@settings(max_examples=40, deadline=None)
+def test_rank_branch_sets_are_exact(schedule, m_n):
+    m, n = m_n
+    tplan, m = build(schedule, m, n)
+    for r in range(n):
+        prog = PL.specialize(tplan, r)
+        col = tplan.kind[:, r]
+        assert np.array_equal(prog.kind, col)
+        # rank-program segments: exact branch sets, full tick coverage
+        assert prog.segments[0].start == 0
+        assert prog.segments[-1].stop == tplan.n_ticks
+        for a, b in zip(prog.segments, prog.segments[1:]):
+            assert a.stop == b.start
+        for seg in prog.segments:
+            present = tuple(sorted(set(int(k)
+                                       for k in col[seg.start:seg.stop])))
+            assert seg.kinds == present, (schedule, r, seg)
+            assert prog.branches_in(seg.start, seg.stop) == present
+        # global executor segments: the per-rank pruned set the MPMD
+        # lowering traces is exactly what the column contains there
+        for seg in tplan.segments:
+            present = set(int(k) for k in col[seg.start:seg.stop])
+            assert present <= set(seg.kinds), (schedule, r, seg)
+            assert prog.branches_in(seg.start, seg.stop) \
+                == tuple(sorted(present))
+
+
+@given(schedule_names, mn)
+@settings(max_examples=40, deadline=None)
+def test_rank_depths_match_schedule_predictions(schedule, m_n):
+    m, n = m_n
+    residuals = "reuse" if schedule == "zb" else "recompute"
+    tplan, m = build(schedule, m, n, residuals=residuals)
+    table, n_stages, ranks = PL.schedule_table(schedule, m, n)
+    park = S.peak_park(table, n_stages, ranks=ranks)
+    resid = S.peak_residuals(table, n_stages, ranks=ranks)
+    for r in range(n):
+        prog = PL.specialize(tplan, r)
+        assert prog.park_depth == park[r], (schedule, r)
+        if tplan.residuals == "reuse":
+            assert prog.resid_depth == resid[r], (schedule, r)
+        else:
+            assert prog.resid_depth == 0
+        # every slot a column touches fits the declared depth
+        for colm, depth in ((prog.park_recv, prog.park_depth),
+                            (prog.park_read, prog.park_depth),
+                            (prog.b_recv, prog.b_inbox_depth),
+                            (prog.b_read, prog.b_inbox_depth)):
+            used = colm[colm >= 0]
+            if used.size:
+                assert int(used.max()) < depth, (schedule, r)
+        slots = prog.buffer_slots()
+        assert slots["park"] == park[r]
+    # the MPMD headline: some rank declares strictly fewer park slots
+    # than the SPMD ring max whenever the park profile is non-uniform
+    if len(set(tplan.per_stage_park)) > 1:
+        assert min(PL.specialize(tplan, r).park_depth
+                   for r in range(n)) < tplan.park_depth
+
+
+@given(schedule_names, mn)
+@settings(max_examples=40, deadline=None)
+def test_send_latch_columns(schedule, m_n):
+    m, n = m_n
+    tplan, m = build(schedule, m, n)
+    split = bool((tplan.kind == PL.BWD_X).any())
+    for t in range(tplan.n_ticks):
+        for r in range(n):
+            k = int(tplan.kind[t, r])
+            s = int(tplan.chunk[t, r]) * n + r
+            want_f = k == PL.FWD and s < tplan.n_stages - 1
+            assert (tplan.send_slot[t, r] >= 0) == want_f, (t, r)
+            bk = PL.BWD_X if split else PL.BWD
+            want_b = k == bk and s > 0
+            assert (tplan.b_send_slot[t, r] >= 0) == want_b, (t, r)
+    # every chain arrival is deliverable by the one-tick-ahead ship: a
+    # park/inbox recv at tick t requires a latch somewhere at t-1
+    for t in range(tplan.n_ticks):
+        if (tplan.park_recv[t] >= 0).any():
+            assert t > 0 and (tplan.send_slot[t - 1] >= 0).any(), t
+        if (tplan.b_recv[t] >= 0).any():
+            assert t > 0 and (tplan.b_send_slot[t - 1] >= 0).any(), t
+
+
+def test_specialize_interleaved_and_validation():
+    """Chunked plans specialize per physical rank (both chunks' columns);
+    out-of-range ranks are rejected."""
+    tplan = PL.plan_for("interleaved:2", 8, 4)
+    for r in range(4):
+        prog = PL.specialize(tplan, r)
+        assert prog.n_ticks == tplan.n_ticks
+        assert set(int(c) for c in prog.chunk[prog.kind != PL.NOP]) \
+            == {0, 1}
+        assert prog.park_depth == tplan.per_stage_park[r]
+    with pytest.raises(ValueError):
+        PL.specialize(tplan, 4)
+    with pytest.raises(ValueError):
+        PL.specialize(tplan, -1)
+
+
+def test_specialize_1f1b_rank0_parks_nothing():
+    """The memory headline restated as a concrete table: at pipe=4, m=8,
+    1F1B's rank 0 program declares 0 park slots while the SPMD plan
+    allocates the ring max on every rank."""
+    tplan = PL.plan_for("1f1b", 8, 4)
+    progs = [PL.specialize(tplan, r) for r in range(4)]
+    assert progs[0].park_depth == 0
+    assert tplan.park_depth == max(p.park_depth for p in progs)
+    assert tplan.park_depth > 0
+    # fill window: rank 0 is branch-free F while late ranks still idle
+    first = progs[0].segments[0]
+    assert first.kinds == (PL.FWD,)
