@@ -24,6 +24,7 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import mesh as mesh_lib, steps
 from repro.models.lm import LMModel
 from repro.optim import optimizers as optim
+from repro.planner import HardwareSpec
 from repro.runtime.fault_tolerance import Supervisor, StepWatchdog
 
 # ~100M params: a 12-layer, d=512 llama-style decoder with a 32k vocab
@@ -42,11 +43,20 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_demo_ckpt")
     args = ap.parse_args()
 
-    pcfg = ParallelConfig(pipe=4, tp=1, data=2, pod=1, n_micro=4,
-                          remat="full", portals=True)
+    shape = ShapeConfig("train", args.seq_len, args.batch, "train")
+    # the planner picks schedule / n_micro / residuals / executor /
+    # partition against the hardware description; remaining knobs (data
+    # parallelism, remat policy, portals) pass through as overrides.
+    # executors=("spmd",): on emulated host-CPU devices the mpmd leg's
+    # per-rank specialized compilation is not worth it
+    pcfg = ParallelConfig.auto(
+        ARCH, shape,
+        HardwareSpec(name="demo-4", ranks=4, memory_bytes=4.0 * 2**30),
+        executors=("spmd",), data=2, remat="full", portals=True)
+    print(f"planned: schedule={pcfg.schedule} m={pcfg.n_micro} "
+          f"residuals={pcfg.residuals} executor={pcfg.executor}")
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(ARCH, pcfg, dtype=jnp.float32)
-    shape = ShapeConfig("train", args.seq_len, args.batch, "train")
     ocfg = optim.OptimizerConfig(lr=3e-4, warmup_steps=20,
                                  total_steps=args.steps)
     data = SyntheticLM(DataConfig(vocab=ARCH.vocab, seq_len=args.seq_len,

@@ -162,18 +162,144 @@ RESIDUAL_MODES = ("recompute", "reuse")
 EXECUTORS = ("spmd", "mpmd")
 
 
-def parse_schedule(schedule: str) -> Tuple[str, int]:
-    """Split a schedule string into (base, virtual_stages).
+#: schedule bases the config layer accepts ("interleaved" carries a
+#: ``virtual_stages`` count; every other base has exactly one chunk/rank).
+SCHEDULE_BASES = ("gpipe", "gpipe_fwd", "gpipe_tasked", "1f1b",
+                  "interleaved", "zb")
 
+
+@dataclass(frozen=True)
+class ScheduleSpec:
+    """Structured schedule selection — the planner-facing replacement for
+    overloaded ``schedule="interleaved:2"`` strings.
+
+    Bundles the four knobs that together decide what the tick loop runs:
+    the schedule *base* (task-table family), the interleaving factor
+    ``virtual_stages`` (only meaningful for ``base="interleaved"``), the
+    split-backward ``residuals`` mode, and the ``executor`` lowering.
+    ``to_dict``/``from_dict`` round-trip exactly (the planner's
+    ``PlanReport`` serializes specs through them), and :meth:`name`
+    renders the legacy string form the rest of the stack still accepts.
+    """
+    base: str = "gpipe"
+    virtual_stages: int = 1
+    residuals: str = "recompute"
+    executor: str = "spmd"
+
+    def __post_init__(self):
+        if self.base not in SCHEDULE_BASES:
+            raise ValueError(f"unknown schedule base {self.base!r}; "
+                             f"want one of {SCHEDULE_BASES}")
+        if self.virtual_stages < 1:
+            raise ValueError(
+                f"virtual stages must be >= 1, got {self.virtual_stages}")
+        if self.base != "interleaved" and self.virtual_stages != 1:
+            raise ValueError(
+                f"schedule base {self.base!r} has exactly 1 virtual stage "
+                f"per rank, got {self.virtual_stages}")
+        if self.residuals not in RESIDUAL_MODES:
+            raise ValueError(f"unknown residuals mode {self.residuals!r}; "
+                             f"want one of {RESIDUAL_MODES}")
+        if self.executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {self.executor!r}; "
+                             f"want one of {EXECUTORS}")
+
+    @property
+    def name(self) -> str:
+        """The legacy string form (``"interleaved:3"``, ``"zb"``, ...)."""
+        if self.base == "interleaved":
+            return f"interleaved:{self.virtual_stages}"
+        return self.base
+
+    @classmethod
+    def from_string(cls, schedule: str, *, residuals: str = "recompute",
+                    executor: str = "spmd") -> "ScheduleSpec":
+        """Build a spec from a legacy ``"interleaved:2"``-style string."""
+        if schedule == "interleaved" or schedule.startswith("interleaved:"):
+            v = int(schedule.split(":", 1)[1]) if ":" in schedule else 2
+            return cls("interleaved", v, residuals, executor)
+        return cls(schedule, 1, residuals, executor)
+
+    def to_dict(self) -> dict:
+        return {"base": self.base, "virtual_stages": self.virtual_stages,
+                "residuals": self.residuals, "executor": self.executor}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScheduleSpec":
+        return cls(base=d["base"],
+                   virtual_stages=int(d.get("virtual_stages", 1)),
+                   residuals=d.get("residuals", "recompute"),
+                   executor=d.get("executor", "spmd"))
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """A complete, serializable pipeline plan: schedule spec + stage
+    partition + microbatch count.
+
+    This is the planner's unit of search and the payload of every
+    ``PlanReport`` entry: :meth:`apply_to` turns it into a concrete
+    :class:`ParallelConfig` (which is how ``dryrun`` and
+    ``steps.build_train_step`` consume a planner choice), and
+    ``to_dict``/``from_dict`` round-trip bit-for-bit through JSON.
+    ``partition`` is the per-GLOBAL-stage layer counts (length
+    ``pipe * virtual_stages``, summing to the model's layer count);
+    empty means the legacy uniform ceil layout.
+    """
+    schedule: ScheduleSpec
+    pipe: int
+    microbatches: int
+    partition: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "partition", tuple(self.partition))
+        if self.pipe < 1:
+            raise ValueError(f"need pipe >= 1, got {self.pipe}")
+        if self.microbatches < 1:
+            raise ValueError(f"need microbatches >= 1, "
+                             f"got {self.microbatches}")
+        if self.partition:
+            n_stages = self.pipe * self.schedule.virtual_stages
+            if len(self.partition) != n_stages:
+                raise ValueError(
+                    f"partition has {len(self.partition)} entries for "
+                    f"{n_stages} global stages")
+            if any(int(p) < 0 for p in self.partition):
+                raise ValueError(f"negative partition entry: "
+                                 f"{self.partition}")
+
+    def to_dict(self) -> dict:
+        return {"schedule": self.schedule.to_dict(), "pipe": self.pipe,
+                "microbatches": self.microbatches,
+                "partition": list(self.partition)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanSpec":
+        return cls(schedule=ScheduleSpec.from_dict(d["schedule"]),
+                   pipe=int(d["pipe"]),
+                   microbatches=int(d["microbatches"]),
+                   partition=tuple(int(p) for p in d.get("partition", ())))
+
+    def apply_to(self, pcfg: "ParallelConfig") -> "ParallelConfig":
+        """Project this plan onto a base config (keeps tp/data/remat/...)."""
+        return pcfg.with_(pipe=self.pipe, n_micro=self.microbatches,
+                          schedule=self.schedule.name,
+                          residuals=self.schedule.residuals,
+                          executor=self.schedule.executor,
+                          partition=self.partition)
+
+
+def parse_schedule(schedule: str) -> Tuple[str, int]:
+    """DEPRECATED shim: split a schedule string into (base, virtual_stages).
+
+    New code should use :meth:`ScheduleSpec.from_string` (this shim merely
+    constructs the spec and unpacks it, so the two can never disagree).
+    Kept because the string form is pervasive in configs and CLIs:
     ``"interleaved:3"`` -> ``("interleaved", 3)`` (bare ``"interleaved"``
     defaults to 2 chunks); every other name has one virtual stage per rank.
     """
-    if schedule == "interleaved" or schedule.startswith("interleaved:"):
-        v = int(schedule.split(":", 1)[1]) if ":" in schedule else 2
-        if v < 1:
-            raise ValueError(f"virtual stages must be >= 1, got {v}")
-        return "interleaved", v
-    return schedule, 1
+    spec = ScheduleSpec.from_string(schedule)
+    return spec.base, spec.virtual_stages
 
 
 @dataclass(frozen=True)
@@ -251,6 +377,10 @@ class ParallelConfig:
     fsdp: bool = True             # ZeRO-3 over the data axis
     grad_compression: str = "none"  # none | int8_ef (cross-pod)
     activation_dtype: str = "bfloat16"
+    partition: Tuple[int, ...] = ()  # per-GLOBAL-stage layer counts (length
+    #   pipe * virtual_stages, summing to the model's layer count) — the
+    #   torchgpipe.balance output wired through core.stage.partition_layout.
+    #   Empty = the legacy uniform ceil layout with tail padding.
 
     def __post_init__(self):
         # Validate knob values at parse time: a typo'd policy should fail
@@ -265,7 +395,17 @@ class ParallelConfig:
         if self.executor not in EXECUTORS:
             raise ValueError(f"unknown executor {self.executor!r}; "
                              f"want one of {EXECUTORS}")
-        parse_schedule(self.schedule)   # rejects malformed "interleaved:v"
+        base, v = parse_schedule(self.schedule)   # rejects malformed specs
+        object.__setattr__(self, "partition", tuple(self.partition))
+        if self.partition:
+            if len(self.partition) != self.pipe * v:
+                raise ValueError(
+                    f"partition has {len(self.partition)} entries for "
+                    f"{self.pipe * v} global stages (pipe={self.pipe}, "
+                    f"virtual_stages={v})")
+            if any(int(p) < 0 for p in self.partition):
+                raise ValueError(f"negative partition entry: "
+                                 f"{self.partition}")
 
     def advisories(self) -> Tuple[str, ...]:
         """Config smells worth surfacing before a run (dryrun prints these).
@@ -294,6 +434,22 @@ class ParallelConfig:
         return self.pipe * self.tp * self.dp2
 
     @property
+    def schedule_spec(self) -> ScheduleSpec:
+        """This config's schedule knobs as a structured spec."""
+        return ScheduleSpec.from_string(self.schedule,
+                                        residuals=self.residuals,
+                                        executor=self.executor)
+
+    @property
+    def spec(self) -> PlanSpec:
+        """This config's pipeline plan as a first-class, serializable
+        :class:`PlanSpec` (schedule + partition + microbatches) — the
+        object the planner searches over and ``PlanReport`` serializes."""
+        return PlanSpec(schedule=self.schedule_spec, pipe=self.pipe,
+                        microbatches=self.n_micro,
+                        partition=self.partition)
+
+    @property
     def schedule_base(self) -> str:
         return parse_schedule(self.schedule)[0]
 
@@ -302,6 +458,49 @@ class ParallelConfig:
         """Chunks per rank: the model is cut into pipe * virtual_stages
         global stages (1 for every non-interleaved schedule)."""
         return parse_schedule(self.schedule)[1]
+
+    @classmethod
+    def auto(cls, arch, shape, hardware=None, executors=("spmd", "mpmd"),
+             **overrides) -> "ParallelConfig":
+        """Single planner entrypoint: search the plan space for ``arch`` ×
+        ``shape`` on ``hardware`` and return a concrete config.
+
+        ``hardware`` is a :class:`repro.planner.hardware.HardwareSpec`, a
+        path to a ``hardware.yaml``, or ``None`` (spec defaults).
+        ``overrides`` seed the base config the plan is projected onto
+        (``data=2``, ``remat="dots"``, ...) — the planner owns ``pipe``,
+        ``n_micro``, ``schedule``, ``residuals``, ``executor``, and
+        ``partition``; everything else passes through.  ``executors``
+        restricts the executor leg of the search (``("spmd",)`` where
+        per-rank specialized compilation isn't worth it, e.g. host-CPU
+        emulation).  Replaces the
+        manual five-knob dance: the chosen partition/schedule/executor
+        come ranked from the calibrated device model under the
+        hardware's memory budget.
+        """
+        from repro.planner import plan_arch
+        from repro.planner.hardware import HardwareSpec
+        if hardware is None:
+            hardware = HardwareSpec()
+        elif not isinstance(hardware, HardwareSpec):
+            hardware = HardwareSpec.from_yaml(hardware)
+        base = cls(pipe=hardware.ranks, tp=1, data=1, pod=1,
+                   n_micro=1).with_(**overrides)
+        report = plan_arch(arch, shape, hardware, base=base,
+                           executors=executors)
+        best = report.best
+        if best is None:
+            raise ValueError(
+                f"planner found no feasible plan for {arch.name}/"
+                f"{shape.name} within {hardware.memory_bytes / 2**30:.1f} "
+                f"GiB/rank — see report.candidates for the closest misses")
+        return best.spec.apply_to(base)
+
+    @classmethod
+    def plan(cls, arch, shape, hardware=None, **overrides
+             ) -> "ParallelConfig":
+        """Alias for :meth:`auto`."""
+        return cls.auto(arch, shape, hardware, **overrides)
 
 
 # ---------------------------------------------------------------------------

@@ -116,6 +116,50 @@ def balance_by_flops(layer_fns: Sequence[Callable], example_inputs, n: int) -> L
     return block_partition(costs, n)
 
 
+def arch_layer_costs(arch, seq_len: int = 0):
+    """Analytic per-layer (flops_per_example, param_bytes) for an ArchConfig.
+
+    The planner's analogue of torchgpipe's profiling pass, computed from the
+    architecture instead of a wall-clock run.  Layers are listed in pipeline
+    order — for encoder-decoder archs the ``enc_layers`` encoder blocks come
+    first, then the ``n_layers`` decoder blocks (which carry the extra
+    cross-attention term).  Only *relative* weights matter for partitioning;
+    the flops model is matmul-dominant: ``2 * params * tokens`` plus the
+    attention score/value quadratic term.
+    """
+    d = arch.d_model
+    dtype_bytes = 2 if arch.param_dtype in ("bfloat16", "float16") else 4
+    attn = arch.attn
+    heads_dim = attn.n_heads * attn.head_dim if attn is not None and \
+        attn.kind != "none" else 0
+
+    def attn_quad(tokens: int, kv_len: int) -> float:
+        # QK^T + attn @ V: 2 * 2 * tokens * kv_len * n_heads * head_dim
+        return 4.0 * tokens * kv_len * heads_dim
+
+    base_params = arch.layer_params()
+    cross_params = 4 * d * heads_dim if arch.is_encdec else 0
+    seq = seq_len or 1
+    enc_len = arch.enc_len or seq
+
+    flops: List[float] = []
+    bytes_: List[int] = []
+    if arch.is_encdec:
+        for _ in range(arch.enc_layers):
+            flops.append(2.0 * base_params * enc_len + attn_quad(enc_len, enc_len))
+            bytes_.append(base_params * dtype_bytes)
+        for _ in range(arch.n_layers):
+            flops.append(2.0 * (base_params + cross_params) * seq
+                         + attn_quad(seq, seq) + attn_quad(seq, enc_len))
+            bytes_.append((base_params + cross_params) * dtype_bytes)
+    else:
+        per = 2.0 * base_params * seq + (attn_quad(seq, seq) if heads_dim else 0.0)
+        for _ in range(arch.n_layers):
+            flops.append(per)
+            bytes_.append(base_params * dtype_bytes)
+    return flops, bytes_
+
+
 def max_block_cost(costs: Sequence[float], sizes: Sequence[int]) -> float:
     b = partition_bounds(sizes)
     return max((sum(costs[b[j]:b[j + 1]]) for j in range(len(sizes))), default=0.0)

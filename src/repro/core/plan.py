@@ -740,6 +740,76 @@ def schedule_bubble(schedule: str, m: int, n: int,
         comm_cost=comm_cost, overlap_comm=executor == "mpmd")
 
 
+@dataclass(frozen=True)
+class PlanCost:
+    """Planner-facing time + memory summary of one lowered schedule.
+
+    Times are in stage-forward units under the supplied cost model; slot
+    counts are the EXACT per-rank high-water marks of the lowered plan's
+    free-list allocator (what the executor allocates), not schedule-level
+    bounds.
+    """
+    t_end: float                      # device-model makespan
+    busy: Tuple[float, ...]           # per-rank busy time
+    bubble: float                     # 1 - sum(busy) / (ranks * t_end)
+    park: Tuple[int, ...]             # per-rank park-slot high-water
+    b_inbox: Tuple[int, ...]          # per-rank bwd-inbox high-water
+    fs: Tuple[int, ...]               # per-rank stream-stash high-water
+    resid: Tuple[int, ...]            # per-rank residual-stash high-water
+    n_stages: int
+    ranks: int
+
+    def carry_slots(self, rank: int) -> int:
+        """Activation-sized buffer slots rank ``rank`` allocates."""
+        return int(self.park[rank]) + int(self.b_inbox[rank]) \
+            + int(self.fs[rank])
+
+
+def plan_cost(schedule: str, m: int, n: int, *,
+              residuals: str = "recompute", remat: str = "dots",
+              executor: str = "spmd", comm_cost: float = 0.0,
+              stage_weights: Optional[Sequence[float]] = None) -> PlanCost:
+    """Score one (schedule, m, n) point: device-model time + exact memory.
+
+    The stable query the automatic planner drives: builds the named
+    schedule's task table, prices it with ``stage_weights`` (per-GLOBAL-
+    stage forward cost in stage-forward units; ``None`` = the uniform
+    ``ranks / n_stages`` share of :func:`schedules.default_task_cost`),
+    runs :func:`schedules.simulate_device_times` with the comm/overlap
+    term, and lowers the table once to read the executor's true per-rank
+    buffer high-water marks.
+    """
+    table, n_stages, ranks = schedule_table(schedule, m, n)
+    if stage_weights is None:
+        cost_of = schedules.default_task_cost(
+            n_stages, ranks, residuals=residuals, remat=remat)
+    else:
+        if len(stage_weights) != n_stages:
+            raise ValueError(f"stage_weights has {len(stage_weights)} "
+                             f"entries for {n_stages} stages")
+        cost_of = schedules.weighted_task_cost(
+            stage_weights, residuals=residuals, remat=remat)
+    t_end, busy = schedules.simulate_device_times(
+        table, ranks, cost_of, comm_cost=comm_cost,
+        overlap_comm=executor == "mpmd")
+    tplan = plan_for(schedule, m, n, residuals=residuals)
+    bubble = 1.0 - sum(busy) / (ranks * t_end) if t_end > 0 else 0.0
+
+    def per_rank(values, fallback):
+        if len(values) == ranks:
+            return tuple(int(x) for x in values)
+        return tuple(int(fallback) for _ in range(ranks))
+
+    return PlanCost(
+        t_end=float(t_end), busy=tuple(float(b) for b in busy),
+        bubble=float(bubble),
+        park=per_rank(tplan.per_stage_park, tplan.park_depth),
+        b_inbox=per_rank(tplan.per_stage_b_inbox, tplan.b_inbox_depth),
+        fs=per_rank(tplan.per_stage_fs, tplan.fs_depth),
+        resid=per_rank(tplan.per_stage_resid, tplan.resid_depth),
+        n_stages=n_stages, ranks=ranks)
+
+
 def plan_for(schedule: str, m: int, n: int, *,
              skips: Sequence[SkipSpec] = (),
              portals: bool = True,

@@ -382,11 +382,27 @@ def default_task_cost(n_stages: int, ranks: Optional[int] = None,
     """
     ranks = n_stages if ranks is None else ranks
     share = ranks / n_stages          # fraction of the model per stage
+    return weighted_task_cost([share] * n_stages,
+                              residuals=residuals, remat=remat)
+
+
+def weighted_task_cost(stage_weights: Sequence[float],
+                       *, residuals: str = "recompute", remat: str = "dots"):
+    """Per-task cost model with NON-UNIFORM stage weights.
+
+    ``stage_weights[s]`` is stage ``s``'s forward cost in stage-forward
+    units — for a balanced partition, ``stage_flops_s / total_flops *
+    ranks`` so uniform stages reduce to :func:`default_task_cost`'s
+    ``ranks / n_stages`` share.  Backward flavours use the same
+    multipliers as :func:`default_task_cost` (B=3, Bx=2, Bw=1|2 per the
+    residuals/remat pricing documented there).
+    """
+    weights = [float(w) for w in stage_weights]
     bw = 1.0 if residuals == "reuse" and remat != "full" else 2.0
     per_kind = {"F": 1.0, "B": 3.0, "Bx": 2.0, "Bw": bw, "R": 0.0}
 
     def cost(task: Task) -> float:
-        return per_kind[task.kind] * share
+        return per_kind[task.kind] * weights[task.stage]
     return cost
 
 

@@ -37,32 +37,102 @@ import numpy as np
 # Homogeneous stacked stages
 # ---------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class StageLayout:
+    """Layer -> (stage, slot) assignment for the stacked representation.
+
+    ``slot_layer[s, l]`` is the GLOBAL layer index living at stage ``s``,
+    slot ``l`` (``-1`` for identity padding); ``mask`` is its 1.0/0.0
+    float view (what the blocks gate their residual delta with).  With a
+    ``partition`` (per-stage layer counts from ``core.balance``) stages
+    hold contiguous, possibly non-uniform runs of layers padded to the
+    largest stage; without one the legacy uniform ceil layout is
+    reproduced exactly (front-to-back flat fill, padding in the tail
+    stages).
+    """
+    L_per_stage: int
+    mask: np.ndarray              # [n_stages, L] float32
+    slot_layer: np.ndarray        # [n_stages, L] int32, -1 = padding
+    sizes: Tuple[int, ...]        # real layers per stage (sums to n_layers)
+    bounds: Tuple[int, ...]       # cumulative: stage s owns [b[s], b[s+1])
+
+    def stage_of(self, layer: int) -> int:
+        """Stage hosting GLOBAL layer index ``layer``."""
+        for s in range(len(self.sizes)):
+            if self.bounds[s] <= layer < self.bounds[s + 1]:
+                return s
+        raise ValueError(f"layer {layer} outside [0, {self.bounds[-1]})")
+
+    def scatter(self, per_layer: np.ndarray, fill) -> np.ndarray:
+        """Spread a length-``n_layers`` per-layer array onto the
+        [n_stages, L] slot grid; padding slots take ``fill``."""
+        per_layer = np.asarray(per_layer)
+        out = np.full((len(self.sizes), self.L_per_stage), fill,
+                      per_layer.dtype)
+        valid = self.slot_layer >= 0
+        out[valid] = per_layer[self.slot_layer[valid]]
+        return out
+
+
+def partition_layout(n_layers: int, n_stages: int,
+                     partition: Optional[Sequence[int]] = None) -> StageLayout:
+    """Build the stacked-stage layout, uniform or balance-partitioned.
+
+    ``partition`` is per-stage layer counts (``core.balance`` output:
+    contiguous, len == n_stages, sums to n_layers); ``None``/empty keeps
+    the legacy uniform ceil layout (identical mask to :func:`pad_layout`).
+    """
+    if partition:
+        sizes = tuple(int(p) for p in partition)
+        if len(sizes) != n_stages:
+            raise ValueError(f"partition has {len(sizes)} entries for "
+                             f"{n_stages} stages")
+        if sum(sizes) != n_layers:
+            raise ValueError(f"partition {sizes} sums to {sum(sizes)}, "
+                             f"model has {n_layers} layers")
+    else:
+        L = -(-n_layers // n_stages)  # ceil
+        sizes = tuple(min(L, max(0, n_layers - s * L))
+                      for s in range(n_stages))
+    Lp = max(max(sizes), 1)
+    bounds = [0]
+    for sz in sizes:
+        bounds.append(bounds[-1] + sz)
+    slot = np.full((n_stages, Lp), -1, np.int32)
+    for s, sz in enumerate(sizes):
+        slot[s, :sz] = np.arange(bounds[s], bounds[s] + sz)
+    mask = (slot >= 0).astype(np.float32)
+    return StageLayout(Lp, mask, slot, sizes, tuple(bounds))
+
+
 def pad_layout(n_layers: int, n_stages: int) -> Tuple[int, np.ndarray]:
-    """Uniform layers-per-stage with identity padding.
+    """Uniform layers-per-stage with identity padding (legacy wrapper).
 
     Returns (L_per_stage, mask[n_stages, L_per_stage]) where mask is 1.0 for
     real layers.  Real layers fill stages front-to-back; padding lands at the
     end of the later stages.
     """
-    L = -(-n_layers // n_stages)  # ceil
-    mask = np.zeros((n_stages, L), np.float32)
-    flat = mask.reshape(-1)
-    flat[:n_layers] = 1.0
-    return L, mask
+    lay = partition_layout(n_layers, n_stages)
+    return lay.L_per_stage, lay.mask
 
 
-def stack_layer_params(layer_params: Sequence[Any], n_stages: int) -> Any:
+def stack_layer_params(layer_params: Sequence[Any], n_stages: int,
+                       partition: Optional[Sequence[int]] = None) -> Any:
     """Stack per-layer pytrees (length ≤ n_stages*L) into [n_stages, L, ...].
 
-    Missing (padding) layers are zero-filled.
+    Missing (padding) layers are zero-filled.  With ``partition`` each
+    stage's slots hold its own contiguous layer run (non-uniform cuts from
+    ``core.balance``); without, the legacy flat front-to-back fill.
     """
-    L, _ = pad_layout(len(layer_params), n_stages)
+    lay = partition_layout(len(layer_params), n_stages, partition)
     proto = layer_params[0]
     pad = jax.tree.map(jnp.zeros_like, proto)
-    full = list(layer_params) + [pad] * (n_stages * L - len(layer_params))
+    flat_slots = lay.slot_layer.reshape(-1)
+    full = [layer_params[k] if k >= 0 else pad for k in flat_slots]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *full)
     return jax.tree.map(
-        lambda a: a.reshape((n_stages, L) + a.shape[1:]), stacked)
+        lambda a: a.reshape((n_stages, lay.L_per_stage) + a.shape[1:]),
+        stacked)
 
 
 def scan_layers(layer_apply: Callable, stage_params, x, *extra,

@@ -38,7 +38,8 @@ from repro.roofline import analysis
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
              keep_hlo: bool = False, pcfg_override=None,
-             optimized: bool = False, verbose: bool = True) -> dict:
+             optimized: bool = False, verbose: bool = True,
+             plan_spec=None) -> dict:
     arch = configs.get_arch(arch_name)
     shape = SHAPES_BY_NAME[shape_name]
     if not configs.shape_applies(arch, shape):
@@ -50,6 +51,29 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     pcfg = pcfg.with_(pod=2 if multi_pod else 1,
                       n_micro=configs.derive_n_micro(
                           shape, pcfg.with_(pod=2 if multi_pod else 1)))
+    if plan_spec is not None:
+        # a PlanSpec (planner report entry) overrides the five pipeline
+        # knobs wholesale; GSPMD axes (tp/data/pod) stay as derived above.
+        # The production grid's model axis is fixed (dp2*pipe*tp), so when
+        # the plan was made for fewer ranks than the grid's model axis,
+        # the surplus becomes extra data parallelism (dp2).
+        model_axis = pcfg.model_axis
+        pcfg = plan_spec.apply_to(pcfg)
+        want = pcfg.pipe * pcfg.tp
+        if model_axis % want:
+            raise SystemExit(
+                f"plan pipe={pcfg.pipe} x tp={pcfg.tp} does not divide the "
+                f"grid's model axis ({model_axis}); re-plan with a "
+                f"hardware.yaml whose ranks divide it")
+        pcfg = pcfg.with_(dp2=model_axis // want)
+        dp = pcfg.pod * pcfg.data * pcfg.dp2 * pcfg.tp
+        if (shape.global_batch // pcfg.n_micro) % dp:
+            raise SystemExit(
+                f"plan m={pcfg.n_micro} gives micro-batches of "
+                f"{shape.global_batch // pcfg.n_micro} which do not divide "
+                f"the grid's {dp}-way data parallelism; re-plan with "
+                f"ranks={model_axis} in hardware.yaml and --dp {dp} so the "
+                f"planner sees the full grid")
     base = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     mesh = mesh_lib.make_arch_mesh(pcfg, base=base)
     n_dev = mesh.size
@@ -176,8 +200,26 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--optimized", action="store_true",
                     help="use the §Perf-hillclimbed parallel configs")
+    ap.add_argument("--plan", default=None,
+                    help="PlanReport JSON (from `hillclimb --hardware "
+                         "... --out`); applies its top feasible plan")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    plan_spec = None
+    if args.plan:
+        from repro.planner.report import PlanReport
+        with open(args.plan) as f:
+            report = PlanReport.from_json(f.read())
+        best = report.best
+        if best is None:
+            raise SystemExit(f"{args.plan}: no feasible plan in the report")
+        plan_spec = best.spec
+        print(f"[dryrun] applying plan: schedule={plan_spec.schedule.name} "
+              f"residuals={plan_spec.schedule.residuals} "
+              f"executor={plan_spec.schedule.executor} "
+              f"m={plan_spec.microbatches} "
+              f"partition={list(plan_spec.partition) or 'uniform'}")
 
     cells = []
     if args.all:
@@ -196,7 +238,8 @@ def main():
         for a, s in cells:
             try:
                 results.append(run_cell(a, s, multi_pod=mp,
-                                        optimized=args.optimized))
+                                        optimized=args.optimized,
+                                        plan_spec=plan_spec))
             except Exception as e:   # a dry-run failure is a framework bug
                 traceback.print_exc()
                 results.append({"arch": a, "shape": s,

@@ -1,8 +1,19 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-"""Perf-iteration driver (§Perf): re-run a dry-run cell under parallel-config
-overrides and print the roofline delta vs the recorded baseline.
+"""Planner CLI (and legacy perf-iteration driver).
+
+Planner mode — give it a hardware description and it searches microbatch
+count x schedule x residuals x executor x balance partition with the
+calibrated device model, prints the ranked PlanReport, and optionally
+writes it as JSON for ``dryrun --plan`` / ``PlanSpec.from_dict``:
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \\
+        --arch smollm-360m --shape train_4k \\
+        --hardware hardware.yaml --top 5 [--out plan.json] [--smoke]
+
+Legacy mode (no ``--hardware``) — re-run a dry-run cell under manual
+ParallelConfig overrides and print the roofline delta:
 
     PYTHONPATH=src python -m repro.launch.hillclimb \\
         --arch deepseek-7b --shape train_4k \\
@@ -13,18 +24,45 @@ import ast
 import json
 
 from repro import configs
-from repro.launch.dryrun import run_cell
+from repro.configs.base import SHAPES_BY_NAME
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--set", nargs="*", default=[],
-                    help="ParallelConfig overrides, e.g. pipe=8 tp=2")
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+def _plan(args) -> None:
+    from repro.planner import HardwareSpec, microbatch_options, plan_arch
+
+    hw = HardwareSpec.from_yaml(args.hardware)
+    if args.smoke:
+        arch = configs.smoke_arch(args.arch)
+    else:
+        arch = configs.get_arch(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    ms = None
+    if args.dp > 1:
+        # micro-batches must still shard over the surrounding data axis
+        # (e.g. dryrun's production grid) — restrict the enumeration
+        ms = microbatch_options(shape.global_batch, hw.ranks, args.dp)
+    report = plan_arch(arch, shape, hw, microbatches=ms)
+    print(report.format_table(args.top))
+    best = report.best
+    if best is not None:
+        s = best.spec
+        print(f"\n[plan] best: schedule={s.schedule.name} "
+              f"residuals={s.schedule.residuals} "
+              f"executor={s.schedule.executor} m={s.microbatches} "
+              f"partition={list(s.partition) or 'uniform'}")
+        print("[plan] apply with: "
+              "PlanSpec.from_dict(report['candidates'][0]['spec'])"
+              ".apply_to(pcfg)")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report.to_json())
+        print(f"[plan] wrote PlanReport -> {args.out}")
+    if best is None:
+        raise SystemExit("no feasible plan under the memory budget")
+
+
+def _legacy(args) -> None:
+    from repro.launch.dryrun import run_cell
 
     overrides = {}
     for kv in args.set:
@@ -38,6 +76,31 @@ def main():
                  pcfg_override=pcfg)
     if args.out:
         json.dump(r, open(args.out, "w"), indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--hardware", default=None,
+                    help="hardware.yaml path; enables planner mode")
+    ap.add_argument("--top", type=int, default=5,
+                    help="planner mode: rows of the ranked table to print")
+    ap.add_argument("--smoke", action="store_true",
+                    help="planner mode: plan the reduced smoke variant")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="planner mode: surrounding data-parallel ways the "
+                         "micro-batch must shard over (set to the grid's "
+                         "data axis when feeding --plan to dryrun)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="legacy mode: ParallelConfig overrides, e.g. pipe=8")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.hardware:
+        _plan(args)
+    else:
+        _legacy(args)
 
 
 if __name__ == "__main__":

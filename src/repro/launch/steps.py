@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.configs.base import ArchConfig, ParallelConfig, ShapeConfig
+from repro.core import balance
 from repro.core.pipeline import (last_stage_output, microbatch, pipeline_call,
                                  pipeline_grad_call, unmicrobatch)
 from repro.launch import sharding
@@ -26,6 +27,27 @@ from repro.optim import optimizers as optim
 def _carry_proto(model: LMModel, mbg: int, seq: int):
     return {"h": jax.ShapeDtypeStruct((mbg, seq, model.arch.d_model),
                                       model.dtype)}
+
+
+def stage_partition(arch: ArchConfig, pcfg: ParallelConfig, *,
+                    by: str = "flops", seq_len: int = 0) -> Tuple[int, ...]:
+    """Balanced layer -> stage cuts for ``pcfg`` (torchgpipe.balance, wired).
+
+    Partitions the arch's layers over ``pipe * virtual_stages`` GLOBAL
+    stages with the exact contiguous minimax partitioner, weighting layers
+    by analytic per-layer flops (``by="flops"``; pass ``seq_len`` for the
+    attention quadratic term) or parameter bytes (``by="size"``) from
+    :func:`repro.core.balance.arch_layer_costs`.  Feed the result to
+    ``pcfg.with_(partition=...)`` — the model assembly scatters layers and
+    their constants accordingly.
+    """
+    if by not in ("flops", "size"):
+        raise ValueError(f"unknown balance objective {by!r}; "
+                         "want 'flops' or 'size'")
+    n_stages = pcfg.pipe * pcfg.virtual_stages
+    flops, pbytes = balance.arch_layer_costs(arch, seq_len)
+    costs = flops if by == "flops" else pbytes
+    return tuple(balance.block_partition(costs, n_stages))
 
 
 # ---------------------------------------------------------------------------
@@ -59,10 +81,11 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
     # advisory recommends residuals="reuse" (true ZB-H1).
     for msg in pcfg.advisories():
         warnings.warn(msg, stacklevel=2)
-    if pcfg.schedule_base in ("1f1b", "gpipe_tasked", "interleaved", "zb"):
+    spec = pcfg.schedule_spec            # structured view of the knobs
+    if spec.base in ("1f1b", "gpipe_tasked", "interleaved", "zb"):
         return _build_train_step_fused(model, pcfg, mesh, shape, ocfg,
                                        resid_info=resid_info)
-    if pcfg.schedule != "gpipe":
+    if spec.base != "gpipe":
         raise ValueError(f"unknown schedule {pcfg.schedule!r}; want 'gpipe', "
                          "'gpipe_tasked', '1f1b', 'interleaved:v', or 'zb'")
     consts = model.consts()

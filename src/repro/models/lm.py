@@ -61,16 +61,19 @@ class LMModel:
         # interleaved schedules cut the model into pipe * v GLOBAL stages;
         # rank r hosts the v chunks {r, r + pipe, ...} (Megatron layout)
         self.n_stages = self.pcfg.pipe * self.pcfg.virtual_stages
-        self.L_per_stage, mask = stage_lib.pad_layout(self.total_layers,
-                                                      self.n_stages)
-        self.layer_mask = mask                      # np [n_stages, L]
+        # balance-partitioned (pcfg.partition) or legacy uniform ceil layout
+        self.layout = stage_lib.partition_layout(
+            self.total_layers, self.n_stages, self.pcfg.partition or None)
+        self.L_per_stage = self.layout.L_per_stage
+        self.layer_mask = self.layout.mask          # np [n_stages, L]
         fam = B.FAMILIES[a.family]
         (self.block_init, self.block_apply, self.block_decode,
          self.block_cache_proto, self.block_prefill) = fam
         # encoder/decoder stage split (whisper): encoder layers come first.
         if a.is_encdec:
-            self.enc_last_stage = (a.enc_layers - 1) // self.L_per_stage
-            self.dec_first_stage = a.enc_layers // self.L_per_stage
+            self.enc_last_stage = self.layout.stage_of(a.enc_layers - 1)
+            self.dec_first_stage = self.layout.stage_of(a.enc_layers) \
+                if a.enc_layers < self.total_layers else self.n_stages
         else:
             self.enc_last_stage = self.dec_first_stage = -1
 
@@ -80,7 +83,8 @@ class LMModel:
         ks = jax.random.split(key, self.total_layers + 3)
         layer_ps = [self.block_init(ks[i], a, self.dtype)
                     for i in range(self.total_layers)]
-        stages = stage_lib.stack_layer_params(layer_ps, self.n_stages)
+        stages = stage_lib.stack_layer_params(layer_ps, self.n_stages,
+                                              self.pcfg.partition or None)
         emb = {"tok": (jax.random.normal(ks[-1], (a.vocab, a.d_model))
                        * a.d_model ** -0.5).astype(self.dtype)}
         head = {"norm": L.norm_init(a.d_model, a.norm, self.dtype)}
@@ -91,40 +95,44 @@ class LMModel:
 
     # ------------------------------------------------------------ layer consts
     def consts(self) -> Dict[str, jnp.ndarray]:
-        """Stacked [n_stages, L_per_stage] per-layer constants."""
+        """Stacked [n_stages, L_per_stage] per-layer constants.
+
+        Built per GLOBAL layer then scattered onto the (possibly
+        balance-partitioned) slot grid; padding slots take the identity
+        defaults (mask 0, causal 1, dec_active 1) so padded layers stay
+        exact identities under any partition.
+        """
         a = self.arch
-        n, Lp = self.n_stages, self.L_per_stage
-        total = n * Lp
-        mask = self.layer_mask.reshape(-1)
-        window = np.zeros(total, np.int32)
-        causal = np.ones(total, np.int32)
-        cross = np.zeros(total, np.float32)
-        dec_active = np.ones(total, np.float32)
+        tl = self.total_layers
+        window = np.zeros(tl, np.int32)
+        causal = np.ones(tl, np.int32)
+        cross = np.zeros(tl, np.float32)
+        dec_active = np.ones(tl, np.float32)
         if a.attn is not None:
             if a.attn.global_layers:
                 window[:] = a.attn.window
                 for g in a.attn.global_layers:
-                    if g < self.total_layers:
+                    if g < tl:
                         window[g] = B.GLOBAL_WINDOW
             elif a.attn.kind == "swa":
                 window[:] = a.attn.window
+        is_enc_last = np.zeros(tl, np.float32)
+        is_dec_first = np.zeros(tl, np.float32)
         if a.is_encdec:
             causal[:a.enc_layers] = 0
-            cross[a.enc_layers:self.total_layers] = 1.0
+            cross[a.enc_layers:tl] = 1.0
             dec_active[:a.enc_layers] = 0.0
-        is_enc_last = np.zeros(total, np.float32)
-        is_dec_first = np.zeros(total, np.float32)
-        if a.is_encdec:
             is_enc_last[a.enc_layers - 1] = 1.0
             is_dec_first[a.enc_layers] = 1.0
+        sc = self.layout.scatter
         c = {
-            "mask": jnp.asarray(mask, jnp.float32).reshape(n, Lp),
-            "window": jnp.asarray(window).reshape(n, Lp),
-            "causal": jnp.asarray(causal).reshape(n, Lp),
-            "cross": jnp.asarray(cross).reshape(n, Lp),
-            "dec_active": jnp.asarray(dec_active).reshape(n, Lp),
-            "is_enc_last": jnp.asarray(is_enc_last).reshape(n, Lp),
-            "is_dec_first": jnp.asarray(is_dec_first).reshape(n, Lp),
+            "mask": jnp.asarray(self.layer_mask, jnp.float32),
+            "window": jnp.asarray(sc(window, 0)),
+            "causal": jnp.asarray(sc(causal, 1)),
+            "cross": jnp.asarray(sc(cross, 0.0)),
+            "dec_active": jnp.asarray(sc(dec_active, 1.0)),
+            "is_enc_last": jnp.asarray(sc(is_enc_last, 0.0)),
+            "is_dec_first": jnp.asarray(sc(is_dec_first, 0.0)),
         }
         return c
 

@@ -1,0 +1,101 @@
+"""Machine-readable hardware description (`hardware.yaml`) for the planner.
+
+The planner needs four numbers per accelerator pod-slice: how many pipe
+ranks there are, how much memory each holds, how fast it computes, and how
+fast the cross-rank interconnect moves a stage boundary.  ``HardwareSpec``
+carries exactly that (defaults = one v5e slice of 4 chips), round-trips
+through dict/JSON for the PlanReport, and loads from a small YAML file:
+
+    # hardware.yaml
+    name: v5e-4
+    ranks: 4
+    memory_bytes: 17179869184        # 16 GiB HBM per rank
+    flops: 1.97e14                   # peak bf16 flops per rank
+    ici_bytes_per_s: 5.0e10          # per-link interconnect bandwidth
+    param_overhead: 3.0              # grads + adam moments, x param bytes
+    resid_bytes_factor: 1.0          # residual slot bytes / carry bytes
+
+PyYAML is optional: a flat ``key: value`` fallback parser handles the
+schema above when the import is unavailable.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, replace
+from typing import Any, Dict
+
+from repro.configs.base import V5E
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """One homogeneous slice of pipeline ranks, as the planner sees it."""
+    name: str = "v5e"
+    ranks: int = 4
+    memory_bytes: float = float(V5E.hbm_bytes)
+    flops: float = float(V5E.peak_flops_bf16)
+    ici_bytes_per_s: float = float(V5E.ici_bw)
+    # memory multiplier on hosted param bytes: gradients + optimizer state
+    # (adam: m, v) on top of the parameters themselves.
+    param_overhead: float = 3.0
+    # residual-stash slot bytes as a fraction of one carry's bytes
+    # (ZB-H1 reuse stores boundary-sized residuals per Bx slot).
+    resid_bytes_factor: float = 1.0
+
+    def __post_init__(self):
+        if self.ranks < 1:
+            raise ValueError(f"need ranks >= 1, got {self.ranks}")
+        if self.memory_bytes <= 0 or self.flops <= 0 \
+                or self.ici_bytes_per_s <= 0:
+            raise ValueError("memory_bytes, flops, ici_bytes_per_s must be "
+                             "positive")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "HardwareSpec":
+        known = {f for f in cls.__dataclass_fields__}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown hardware.yaml keys: {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**{k: (int(v) if k == "ranks" else
+                          str(v) if k == "name" else float(v))
+                      for k, v in d.items()})
+
+    @classmethod
+    def from_yaml(cls, path: str) -> "HardwareSpec":
+        with open(path) as f:
+            text = f.read()
+        try:
+            import yaml
+            data = yaml.safe_load(text)
+        except ImportError:
+            data = _parse_flat_yaml(text)
+        if not isinstance(data, dict):
+            raise ValueError(f"{path}: expected a mapping of hardware keys, "
+                             f"got {type(data).__name__}")
+        return cls.from_dict(data)
+
+    def with_(self, **kw) -> "HardwareSpec":
+        return replace(self, **kw)
+
+
+def _parse_flat_yaml(text: str) -> Dict[str, Any]:
+    """Fallback for the flat `key: value` schema when PyYAML is absent."""
+    out: Dict[str, Any] = {}
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if ":" not in line:
+            raise ValueError(f"hardware.yaml: cannot parse line {raw!r}")
+        k, v = (s.strip() for s in line.split(":", 1))
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v.strip("'\"")
+    return out

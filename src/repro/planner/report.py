@@ -1,0 +1,134 @@
+"""Ranked planner output: `PlanCandidate` rows inside a `PlanReport`.
+
+The report is the planner's only artifact.  It serializes to JSON
+(`to_json`/`from_json` round-trip through the structured `PlanSpec`
+dicts), prints as a ranked table for the CLI, and its top feasible entry
+feeds `dryrun --plan` / `steps.build_train_step` directly via
+``report.best.spec.apply_to(pcfg)``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import PlanSpec
+
+
+@dataclass(frozen=True)
+class PlanCandidate:
+    """One scored point of the search space."""
+    spec: PlanSpec
+    step_units: float            # device-model makespan, stage-forward units
+    step_s: float                # the same, in seconds under the hardware
+    bubble: float                # 1 - busy / (ranks * t_end)
+    comm_units: float            # one chain hop, in stage-forward units
+    mem_bytes: Tuple[int, ...]   # predicted peak bytes per rank
+    mem_budget: float            # hardware.memory_bytes the plan was held to
+    feasible: bool
+    notes: str = ""
+
+    @property
+    def peak_mem_bytes(self) -> int:
+        return max(self.mem_bytes) if self.mem_bytes else 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "spec": self.spec.to_dict(),
+            "step_units": self.step_units,
+            "step_s": self.step_s,
+            "bubble": self.bubble,
+            "comm_units": self.comm_units,
+            "mem_bytes": list(self.mem_bytes),
+            "mem_budget": self.mem_budget,
+            "feasible": self.feasible,
+            "notes": self.notes,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlanCandidate":
+        return cls(spec=PlanSpec.from_dict(d["spec"]),
+                   step_units=float(d["step_units"]),
+                   step_s=float(d["step_s"]),
+                   bubble=float(d["bubble"]),
+                   comm_units=float(d["comm_units"]),
+                   mem_bytes=tuple(int(b) for b in d["mem_bytes"]),
+                   mem_budget=float(d["mem_budget"]),
+                   feasible=bool(d["feasible"]),
+                   notes=str(d.get("notes", "")))
+
+
+@dataclass
+class PlanReport:
+    """Ranked candidates for one (model, shape, hardware) query.
+
+    Candidates are ordered feasible-first, then by device-model step time;
+    ``best`` is the top feasible entry (None when the budget admits no
+    plan — shrink the model or raise ``memory_bytes``).
+    """
+    model: str
+    shape: str
+    hardware: Dict[str, Any]
+    candidates: List[PlanCandidate] = field(default_factory=list)
+
+    def ranked(self) -> List[PlanCandidate]:
+        # rank by SECONDS: step_units are not comparable across microbatch
+        # counts (one stage-forward unit scales with the per-micro batch)
+        return sorted(self.candidates,
+                      key=lambda c: (not c.feasible, c.step_s, c.step_units))
+
+    @property
+    def best(self) -> Optional[PlanCandidate]:
+        for c in self.ranked():
+            if c.feasible:
+                return c
+        return None
+
+    def top(self, k: int) -> List[PlanCandidate]:
+        return self.ranked()[:k]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"model": self.model, "shape": self.shape,
+                "hardware": self.hardware,
+                "candidates": [c.to_dict() for c in self.ranked()]}
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 1)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlanReport":
+        return cls(model=d["model"], shape=d["shape"],
+                   hardware=dict(d["hardware"]),
+                   candidates=[PlanCandidate.from_dict(c)
+                               for c in d["candidates"]])
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanReport":
+        return cls.from_dict(json.loads(text))
+
+    def format_table(self, k: int = 10) -> str:
+        """Human-readable ranked table for the CLI."""
+        hdr = (f"PlanReport  model={self.model}  shape={self.shape}  "
+               f"hardware={self.hardware.get('name', '?')} "
+               f"(ranks={self.hardware.get('ranks', '?')}, "
+               f"mem/rank={float(self.hardware.get('memory_bytes', 0)) / 2**30:.1f} GiB)")
+        cols = (f"{'#':>2} {'schedule':<14} {'m':>3} {'resid':<9} "
+                f"{'exec':<4} {'partition':<18} {'t[units]':>9} "
+                f"{'t[ms]':>9} {'bubble':>6} {'mem[GiB]':>8} {'ok':>3}")
+        lines = [hdr, cols, "-" * len(cols)]
+        for i, c in enumerate(self.top(k)):
+            s = c.spec
+            part = ",".join(str(p) for p in s.partition) or "uniform"
+            if len(part) > 18:
+                part = part[:15] + "..."
+            lines.append(
+                f"{i + 1:>2} {s.schedule.name:<14} {s.microbatches:>3} "
+                f"{s.schedule.residuals:<9} {s.schedule.executor:<4} "
+                f"{part:<18} {c.step_units:>9.2f} "
+                f"{c.step_s * 1e3:>9.3f} {c.bubble:>6.3f} "
+                f"{c.peak_mem_bytes / 2**30:>8.2f} "
+                f"{'yes' if c.feasible else 'NO':>3}")
+        if self.best is None:
+            lines.append("(no feasible plan under the memory budget)")
+        return "\n".join(lines)

@@ -1,0 +1,245 @@
+"""Plan search: enumerate schedule x partition x microbatch, score, rank.
+
+The search space is the cross product the README's manual recipe used to
+hand-pick:
+
+* microbatch count ``m`` — divisors of the global batch (GPipe wants
+  ``m >> n``; more micros shrink the bubble but shrink the per-micro
+  matmuls and grow the park);
+* schedule — ``gpipe_tasked`` / ``1f1b`` / ``interleaved:v`` / ``zb``
+  (the bitwise-verified zoo from ``core.schedules``);
+* residual mode — ``recompute`` everywhere, ``reuse`` (true ZB-H1) for
+  split-backward schedules;
+* executor — ``spmd`` (serialized chain hop) / ``mpmd`` (double-buffered
+  overlap);
+* stage partition — legacy uniform ceil layout, or the exact contiguous
+  minimax cuts of ``core.balance`` over per-layer flops / bytes.
+
+Each point is scored with :func:`repro.core.plan.plan_cost`: the
+event-driven device model (with the comm/overlap term priced from the
+hardware spec, exactly like ``launch.dryrun``) gives the time objective;
+the lowered plan's per-rank park / inbox / residual slot high-waters plus
+hosted parameter bytes give the memory constraint checked against
+``hardware.memory_bytes``.  Models enter through a light
+:class:`ModelProfile` so transformer LMs (``profile_arch``) and the
+heterogeneous U-Net (``profile_unet``) share one search path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import (ArchConfig, ParallelConfig, PlanSpec,
+                                ScheduleSpec, ShapeConfig)
+from repro.core import balance
+from repro.core import plan as plan_lib
+from repro.core.stage import partition_layout
+from repro.planner.hardware import HardwareSpec
+from repro.planner.report import PlanCandidate, PlanReport
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    """What the planner needs to know about a model, and nothing else."""
+    name: str
+    layer_flops: Tuple[float, ...]     # per-example FORWARD flops per layer
+    layer_bytes: Tuple[int, ...]       # parameter bytes per layer
+    carry_bytes_per_example: int       # stage-boundary activation bytes
+    global_batch: int
+    extra_bytes: int = 0               # embed/head params, replicated per rank
+    # stacked families run every [n_stages, L] slot at the SAME block shape
+    # (identity padding keeps its flops and zero params' bytes), so stage
+    # cost/bytes go as L_per_stage x the largest slot; switch families
+    # (U-Net) run each stage's own code, so stages cost their layer sums.
+    stacked: bool = True
+
+    def __post_init__(self):
+        if len(self.layer_flops) != len(self.layer_bytes):
+            raise ValueError("layer_flops and layer_bytes disagree on the "
+                             "layer count")
+        if not self.layer_flops:
+            raise ValueError("profile needs at least one layer")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_flops)
+
+    @property
+    def total_flops(self) -> float:
+        return float(sum(self.layer_flops))
+
+    def stage_costs(self, n_stages: int,
+                    partition: Tuple[int, ...]) -> Tuple[List[float], List[int]]:
+        """Per-GLOBAL-stage (forward flops, param bytes) under a layout."""
+        lay = partition_layout(self.n_layers, n_stages, partition or None)
+        if self.stacked:
+            slot_f = max(self.layer_flops)
+            slot_b = max(self.layer_bytes)
+            return ([lay.L_per_stage * slot_f] * n_stages,
+                    [lay.L_per_stage * slot_b] * n_stages)
+        flops, bytes_ = [], []
+        for s in range(n_stages):
+            lo, hi = lay.bounds[s], lay.bounds[s + 1]
+            flops.append(float(sum(self.layer_flops[lo:hi])))
+            bytes_.append(int(sum(self.layer_bytes[lo:hi])))
+        # the switch executor pads every stage buffer to the largest stage
+        pad = max(bytes_) if bytes_ else 0
+        return flops, [pad] * n_stages
+
+
+def profile_arch(arch: ArchConfig, shape: ShapeConfig) -> ModelProfile:
+    """Profile a transformer-family ArchConfig for the planner."""
+    flops, pbytes = balance.arch_layer_costs(arch, shape.seq_len)
+    act_bytes = 2 if arch.param_dtype in ("bfloat16", "float16") else 4
+    dtype_bytes = act_bytes
+    extra = arch.vocab * arch.d_model * (1 if arch.tie_embeddings else 2) \
+        * dtype_bytes
+    return ModelProfile(
+        name=arch.name,
+        layer_flops=tuple(flops), layer_bytes=tuple(pbytes),
+        carry_bytes_per_example=shape.seq_len * arch.d_model * act_bytes,
+        global_batch=shape.global_batch, extra_bytes=extra, stacked=True)
+
+
+def profile_unet(cfg, global_batch: int) -> ModelProfile:
+    """Profile the sequentialized U-Net (heterogeneous switch stages)."""
+    from repro.models.unet import build_layers
+    layers = build_layers(cfg)
+    carry = max(l.res * l.res * l.cin for l in layers) * 4   # fp32 NHWC
+    return ModelProfile(
+        name="unet",
+        layer_flops=tuple(l.flops() for l in layers),
+        layer_bytes=tuple(l.param_count() * 4 for l in layers),
+        carry_bytes_per_example=carry,
+        global_batch=global_batch, extra_bytes=0, stacked=False)
+
+
+def microbatch_options(global_batch: int, pipe: int, dp: int = 1,
+                       target_ratio: int = 8) -> List[int]:
+    """Valid microbatch counts: divisors of the global batch whose per-micro
+    batch still shards over the ``dp`` data axis, up to ``target_ratio *
+    pipe`` micros (GPipe wants m >> n; beyond that the park grows for
+    vanishing bubble gains)."""
+    cap = min(global_batch, max(target_ratio * pipe, pipe))
+    return [m for m in range(1, cap + 1)
+            if global_batch % m == 0 and (global_batch // m) % dp == 0]
+
+
+def _schedule_specs(pipe: int, n_layers: int,
+                    executors: Sequence[str]) -> List[ScheduleSpec]:
+    out = []
+    for ex in executors:
+        for base in ("gpipe_tasked", "1f1b", "zb"):
+            out.append(ScheduleSpec(base=base, residuals="recompute",
+                                    executor=ex))
+        out.append(ScheduleSpec(base="zb", residuals="reuse", executor=ex))
+        for v in (2,):
+            if pipe * v <= n_layers and pipe > 1:
+                out.append(ScheduleSpec(base="interleaved", virtual_stages=v,
+                                        residuals="recompute", executor=ex))
+    return out
+
+
+def _partition_options(profile: ModelProfile,
+                       n_stages: int) -> List[Tuple[int, ...]]:
+    """Uniform layout plus the balance cuts, deduplicated."""
+    uniform_sizes = partition_layout(profile.n_layers, n_stages).sizes
+    opts: List[Tuple[int, ...]] = [()]
+    seen = {uniform_sizes}
+    for costs in (profile.layer_flops, profile.layer_bytes):
+        cut = tuple(balance.block_partition(list(costs), n_stages))
+        if cut not in seen:
+            seen.add(cut)
+            opts.append(cut)
+    return opts
+
+
+def score_candidate(profile: ModelProfile, hw: HardwareSpec, spec: PlanSpec,
+                    *, remat: str = "dots") -> PlanCandidate:
+    """Device-model time + exact per-rank memory for one PlanSpec."""
+    sched = spec.schedule
+    pipe, m, v = spec.pipe, spec.microbatches, sched.virtual_stages
+    n_stages = pipe * v
+    mb = profile.global_batch // m
+    carry_bytes = mb * profile.carry_bytes_per_example
+    stage_flops, stage_bytes = profile.stage_costs(n_stages, spec.partition)
+
+    # stage-forward UNIT: 1/ranks of the model's per-micro forward compute
+    unit_s = (profile.total_flops * mb / pipe) / hw.flops
+    weights = [f * mb / hw.flops / unit_s for f in stage_flops]
+    hop_s = carry_bytes / hw.ici_bytes_per_s
+    comm_units = hop_s / unit_s if unit_s > 0 else 0.0
+
+    cost = plan_lib.plan_cost(
+        sched.name, m, pipe, residuals=sched.residuals, remat=remat,
+        executor=sched.executor, comm_cost=comm_units,
+        stage_weights=weights)
+
+    # per-rank memory: hosted params (+grads/opt) + tick-loop carry slots
+    # + residual stash.  Rank r hosts chunks {r, r + pipe, ...}.
+    param_mult = 1.0 + hw.param_overhead
+    mem = []
+    for r in range(pipe):
+        hosted = sum(stage_bytes[s] for s in range(r, n_stages, pipe))
+        mb_slots = cost.carry_slots(r) + 2      # + in-flight compute in/out
+        mem.append(int(
+            (hosted + profile.extra_bytes) * param_mult
+            + mb_slots * carry_bytes
+            + cost.resid[r] * carry_bytes * hw.resid_bytes_factor))
+    feasible = max(mem) <= hw.memory_bytes
+    return PlanCandidate(
+        spec=spec, step_units=cost.t_end, step_s=cost.t_end * unit_s,
+        bubble=cost.bubble, comm_units=comm_units,
+        mem_bytes=tuple(mem), mem_budget=float(hw.memory_bytes),
+        feasible=feasible)
+
+
+def plan_profile(profile: ModelProfile, hw: HardwareSpec, *,
+                 base: Optional[ParallelConfig] = None,
+                 shape_name: str = "",
+                 microbatches: Optional[Sequence[int]] = None,
+                 executors: Sequence[str] = ("spmd", "mpmd")) -> PlanReport:
+    """Search the full candidate space for one profiled model.
+
+    ``executors`` restricts the executor leg of the search (e.g.
+    ``("spmd",)`` on hosts where per-rank specialized compilation is not
+    worth it).
+    """
+    pipe = base.pipe if base is not None else hw.ranks
+    remat = base.remat if base is not None else "dots"
+    dp = base.data * base.pod * base.dp2 if base is not None else 1
+    ms = list(microbatches) if microbatches is not None else \
+        microbatch_options(profile.global_batch, pipe, dp)
+    report = PlanReport(model=profile.name, shape=shape_name,
+                        hardware=hw.to_dict())
+    for sched in _schedule_specs(pipe, profile.n_layers, executors):
+        n_stages = pipe * sched.virtual_stages
+        for partition in _partition_options(profile, n_stages):
+            for m in ms:
+                spec = PlanSpec(schedule=sched, pipe=pipe, microbatches=m,
+                                partition=partition)
+                try:
+                    report.candidates.append(
+                        score_candidate(profile, hw, spec, remat=remat))
+                except ValueError:
+                    # schedule constraint (e.g. interleaved needs m % pipe
+                    # == 0): not a plan, not an error
+                    continue
+    return report
+
+
+def plan_arch(arch, shape, hardware: Optional[HardwareSpec] = None, *,
+              base: Optional[ParallelConfig] = None,
+              microbatches: Optional[Sequence[int]] = None,
+              executors: Sequence[str] = ("spmd", "mpmd")) -> PlanReport:
+    """Plan a registered arch (by name or ArchConfig) on a hardware spec."""
+    from repro import configs
+    if isinstance(arch, str):
+        arch = configs.get_arch(arch)
+    if isinstance(shape, str):
+        from repro.configs.base import SHAPES_BY_NAME
+        shape = SHAPES_BY_NAME[shape]
+    hw = hardware or HardwareSpec()
+    profile = profile_arch(arch, shape)
+    return plan_profile(profile, hw, base=base, shape_name=shape.name,
+                        microbatches=microbatches, executors=executors)

@@ -1,0 +1,122 @@
+"""Planner smoke tripwires (CI `planner-smoke` job).
+
+Runs the planner over the three model families the bench suite measures —
+LM (smollm smoke), encoder-decoder with portals (whisper smoke), and the
+heterogeneous U-Net — at pipe in {2, 4}, and checks the two invariants the
+hypothesis suite asserts statistically:
+
+1. **Budget**: every plan the planner marks feasible (and in particular
+   the chosen top plan) predicts peak per-rank memory within the
+   ``hardware.yaml`` budget it was searched under.
+2. **Dominance**: on every row of ``BENCH_schedules.json``, the planner's
+   top choice has device-model step time <= the row's hand-picked config,
+   both scored by the same device model.
+
+Usage:  PYTHONPATH=src python -m repro.planner.smoke [--bench path]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import configs
+from repro.configs.base import PlanSpec, ScheduleSpec, ShapeConfig
+from repro.planner.hardware import HardwareSpec
+from repro.planner.search import (plan_profile, profile_arch, profile_unet,
+                                  score_candidate)
+
+
+def _profiles(global_batch: int):
+    """The three smoke families, as planner profiles."""
+    lm = profile_arch(configs.smoke_arch("smollm-360m"),
+                      ShapeConfig("smoke", 128, global_batch, "train"))
+    whisper = profile_arch(configs.smoke_arch("whisper-tiny"),
+                           ShapeConfig("smoke", 64, global_batch, "train"))
+    from repro.models.unet import UNetConfig
+    unet = profile_unet(UNetConfig(B=1, C=4, levels=3, img=32), global_batch)
+    return {"lm": lm, "whisper-portal": whisper, "unet": unet}
+
+
+def check_budget(pipes=(2, 4), global_batch: int = 16) -> int:
+    """Tripwire 1: feasible plans stay within their declared budget."""
+    checked = 0
+    for name, profile in _profiles(global_batch).items():
+        for pipe in pipes:
+            hw = HardwareSpec(name=f"smoke-{pipe}", ranks=pipe,
+                              memory_bytes=2.0 * 2**30)
+            report = plan_profile(profile, hw, shape_name="smoke")
+            best = report.best
+            assert best is not None, \
+                f"{name}/pipe={pipe}: no feasible plan under 2 GiB/rank"
+            for c in report.candidates:
+                if c.feasible:
+                    assert max(c.mem_bytes) <= hw.memory_bytes, (
+                        f"{name}/pipe={pipe}: feasible plan "
+                        f"{c.spec.to_dict()} predicts "
+                        f"{max(c.mem_bytes)} B > budget {hw.memory_bytes} B")
+                    checked += 1
+            print(f"[planner-smoke] budget ok: {name} pipe={pipe} "
+                  f"best={best.spec.schedule.name} m={best.spec.microbatches} "
+                  f"peak={best.peak_mem_bytes / 2**20:.1f} MiB")
+    return checked
+
+
+def _row_spec(row: dict) -> PlanSpec:
+    """A BENCH_schedules.json row's hand-picked config, as a PlanSpec."""
+    schedule = row["schedule"]
+    residuals = "recompute"
+    if schedule == "zb-reuse":
+        schedule, residuals = "zb", "reuse"
+    elif schedule == "gpipe":
+        schedule = "gpipe_tasked"     # same task table, same device model
+    sched = ScheduleSpec.from_string(schedule, residuals=residuals,
+                                     executor=row.get("executor", "spmd"))
+    return PlanSpec(schedule=sched, pipe=int(row["pipe"]),
+                    microbatches=int(row["n_micro"]))
+
+
+def check_bench_dominance(bench_path: str, global_batch: int = 16) -> int:
+    """Tripwire 2: planner top <= every hand-picked BENCH row, same scorer."""
+    with open(bench_path) as f:
+        rows = json.load(f)["rows"]
+    profiles = _profiles(global_batch)
+    hw_cache = {}
+    checked = 0
+    for row in rows:
+        profile = profiles["lm" if row["model"] == "lm" else "unet"]
+        pipe = int(row["pipe"])
+        if global_batch % int(row["n_micro"]):
+            continue
+        key = (profile.name, pipe)
+        if key not in hw_cache:
+            hw = HardwareSpec(name=f"bench-{pipe}", ranks=pipe,
+                              memory_bytes=64.0 * 2**30)
+            hw_cache[key] = plan_profile(profile, hw, shape_name="bench")
+        report = hw_cache[key]
+        hw = HardwareSpec.from_dict(report.hardware)
+        hand = score_candidate(profile, hw, _row_spec(row))
+        top = report.best
+        assert top is not None, f"no feasible plan for {row['model']}/{pipe}"
+        assert top.step_s <= hand.step_s * (1 + 1e-9), (
+            f"planner top ({top.spec.to_dict()}, {top.step_s:.6g}s) LOSES "
+            f"to hand-picked row {row['schedule']}/m={row['n_micro']}"
+            f"/pipe={pipe} ({hand.step_s:.6g}s)")
+        checked += 1
+    print(f"[planner-smoke] dominance ok on {checked} BENCH rows")
+    return checked
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "BENCH_schedules.json"))
+    args = ap.parse_args()
+    n_budget = check_budget()
+    n_rows = check_bench_dominance(args.bench)
+    print(f"[planner-smoke] PASS ({n_budget} budget checks, "
+          f"{n_rows} bench rows)")
+
+
+if __name__ == "__main__":
+    main()
