@@ -61,10 +61,22 @@ rows carry the same device-model columns (calibrated against their own
 measured gpipe_tasked wall), so smoke tripwires can compare against full
 runs.
 
+Wire engineering (PR 7) columns ride on every fused row:
+``wire_bytes_per_tick`` / ``wire_bytes_per_step`` — actual bytes the
+executor's collectives carry per tick/step under the row's codec —
+``wire_ratio`` (encoded / fp32 bytes) and ``overlapped_route_hops`` (the
+count certified by ``plan.assert_route_overlap``: every route hop latches
+one tick before it ships, so none can serialize under mpmd).  Dedicated
+``model="lm-wire"`` rows A/B the codec grid (fp32 / bf16 / int8-ef on
+both executors): the lossless fp32 rows must be BITWISE equal to the
+spmd baseline loss curve, the lossy rows must track it within tolerance
+while still training.
+
 ``--smoke`` runs a tiny grid and fails if any fused schedule's wall-clock
 exceeds its overhead cap vs gpipe_tasked, if zb-reuse's device model
-exceeds zb-recompute's, or if any schedule's mpmd device model exceeds its
-spmd device model — the CI tripwires for executor regressions.
+exceeds zb-recompute's, if any schedule's mpmd device model exceeds its
+spmd device model, or if any wire tripwire above trips — the CI
+tripwires for executor regressions.
 """
 import json
 import os
@@ -88,6 +100,7 @@ from repro.launch import sharding as sharding_lib
 from repro.models.lm import LMModel
 from repro.models import pipeline_hetero as PH
 from repro.models.unet import UNetConfig, UNetModel
+from repro.core import wire as wire_lib
 from repro.optim import optimizers as optim
 
 SMOKE = {smoke}
@@ -143,6 +156,24 @@ def stash_report(name, pipe, m, carry_bytes, resid_info=None,
                                                       bps))
     return out
 
+def wire_cols(name, pipe, m, carry_bytes, wire="fp32", skips=()):
+    # byte-priced wire traffic of the lowered plan, plus the plan-level
+    # tripwire: assert_route_overlap proves every route hop has its
+    # one-tick-earlier latch column, so under mpmd no hop can serialize
+    # after its producing task.
+    if name == "gpipe":
+        return {{}}
+    schedule, residuals, _ = variant(name)
+    tplan = plan_lib.plan_for(schedule, m, pipe, residuals=residuals,
+                              skips=skips, wire=wire)
+    n_hops = plan_lib.assert_route_overlap(tplan)
+    rep = wire_lib.plan_wire_report(tplan, carry_bytes)
+    return dict(wire=rep["wire"],
+                wire_bytes_per_tick=round(rep["bytes_per_tick"], 1),
+                wire_bytes_per_step=round(rep["bytes_per_step"], 1),
+                wire_ratio=round(rep["ratio"], 4),
+                overlapped_route_hops=n_hops)
+
 def schedule_model(name, pipe, m, unit_us, executor="spmd"):
     schedule, residuals, remat = variant(name)
     table, n_stages, ranks = plan_lib.schedule_table(schedule, m, pipe)
@@ -171,11 +202,12 @@ def time_step(step, *args):
         best = min(best, time.perf_counter() - t0)   # min: noise-robust
     return best, out
 
-def lm_build(name, pipe, m, executor="spmd"):
+def lm_build(name, pipe, m, executor="spmd", wire="fp32"):
     schedule, residuals, remat = variant(name)
     pcfg = ParallelConfig(pipe=pipe, tp=1, data=1, pod=1, n_micro=m,
                           remat=remat, schedule=schedule,
-                          residuals=residuals, executor=executor)
+                          residuals=residuals, executor=executor,
+                          wire=wire)
     mesh = mesh_lib.make_smoke_mesh(pcfg)
     model = LMModel(arch, pcfg, dtype=jnp.float32)
     params = model.init(key)
@@ -233,6 +265,7 @@ for pipe, m in {grid}:
             us_per_step=round(walls[(name, executor)] * 1e6, 1),
             us_per_step_sequential=round(t_seq * 1e6, 1),
             loss=built[(name, executor)][5], **model_cols,
+            **wire_cols(name, pipe, m, carry_bytes),
             **stash_report(name, pipe, m, carry_bytes,
                            resid_info=built[(name, executor)][6],
                            executor=executor)))
@@ -273,6 +306,8 @@ if not SMOKE:
                 model="unet-portal", schedule=name, pipe=pipe, n_micro=m,
                 executor="spmd", n_skip_edges=len(prog.skips),
                 us_per_step=round(dt * 1e6, 1), loss=float(loss),
+                **wire_cols(name, pipe, m, carry_bytes,
+                            skips=prog.skips),
                 **stash_report(name, pipe, m, carry_bytes,
                                resid_info=resid_info)))
         # device-model columns for the portal rows, calibrated against the
@@ -295,6 +330,44 @@ if not SMOKE:
         # the unified runtime's contract: schedules are the same computation
         assert len(set(losses.values())) == 1, losses
 
+# --- wire tripwires: the codec on the real executor (smoke AND full) -----
+# fp32 is the lossless mode: its identity codec plus the double-buffered
+# route latches must not perturb a single bit, so both executors' 5-step
+# loss curves must be BITWISE equal to the spmd baseline (the pre-codec
+# PR 6 path computes exactly this curve).  Lossy codecs must track the
+# fp32 curve (int8-ef's error feedback keeps the drift bounded) and still
+# train.  Each codec row lands in the JSON with its on-the-wire bytes per
+# tick and compressed/uncompressed ratio.
+wp, wm = {grid}[0]
+
+def wire_curve(executor, wire, n_steps=5):
+    step, params, opt, batch, mesh, _, _ = lm_build(
+        "1f1b", wp, wm, executor=executor, wire=wire)
+    ls = []
+    with set_mesh(mesh):
+        p, o = params, opt
+        for _ in range(n_steps):
+            p, o, aux = step(p, o, batch)
+            ls.append(float(aux["loss"]))
+    return ls
+
+base_curve = wire_curve("spmd", "fp32")
+w_carry = (shape.global_batch // wm) * shape.seq_len * arch.d_model * 4
+for executor in ("spmd", "mpmd"):
+    for wname in ("fp32", "bf16", "int8-ef"):
+        cur = wire_curve(executor, wname)
+        if wname == "fp32":
+            assert cur == base_curve, (executor, wname, cur, base_curve)
+        else:
+            assert all(abs(a - b) <= 0.05 * abs(b) + 1e-6
+                       for a, b in zip(cur, base_curve)), \\
+                (executor, wname, cur, base_curve)
+            assert cur[-1] < cur[0], (executor, wname, cur)
+        rows.append(dict(model="lm-wire", schedule="1f1b", pipe=wp,
+                         n_micro=wm, executor=executor,
+                         loss_curve=[round(l, 6) for l in cur],
+                         **wire_cols("1f1b", wp, wm, w_carry, wire=wname)))
+
 print("JSON" + json.dumps(rows))
 """
 
@@ -309,6 +382,12 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
         n_devices=n_devices, timeout=5400)
     rows = json.loads(out.split("JSON", 1)[1])
     for r in rows:
+        if r["model"] == "lm-wire":
+            # codec A/B rows carry loss curves + wire bytes, not wall time
+            print(f"wire_{r['schedule']}_p{r['pipe']}_m{r['n_micro']}"
+                  f"_{r['executor']}_{r['wire']},"
+                  f"{r['wire_bytes_per_tick']},ratio={r['wire_ratio']}")
+            continue
         extra = ""
         if "us_per_step_device_model" in r:
             extra = (f",model={r['us_per_step_device_model']}"
@@ -360,6 +439,25 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
         assert r["residuals"] == "reuse" and sum(r["resid_slots"]) > 0
         assert sum(r["residual_stash_bytes"]) > 0, r["residual_bytes_per_slot"]
 
+    # wire tripwires (smoke AND full): every fused plan passed the
+    # in-bench assert_route_overlap latch check (column present); default
+    # rows ship fp32 (ratio 1.0) with real bytes on the wire; the codec
+    # A/B rows' compressed/uncompressed ratios match their bytes factors
+    # (bf16 halves the wire, int8-ef lands near 0.25 + per-block scales).
+    for r in rows:
+        if "wire_ratio" not in r:
+            assert r["schedule"] == "gpipe", r["schedule"]
+            continue
+        assert r["wire_bytes_per_tick"] > 0, r
+        if r["model"] == "lm-wire":
+            want = {"fp32": 1.0, "bf16": 0.5}.get(r["wire"])
+            if want is not None:
+                assert abs(r["wire_ratio"] - want) < 1e-6, r
+            else:
+                assert 0.2 < r["wire_ratio"] < 0.3, r
+        else:
+            assert r["wire"] == "fp32" and r["wire_ratio"] == 1.0, r
+
     # executor A/B tripwires (smoke AND full):
     #  * the mpmd (comm-overlapped) device model must be <= spmd for EVERY
     #    fused schedule — the double buffering can only hide comm;
@@ -381,7 +479,8 @@ def main(grid=((2, 4), (4, 4), (4, 8)), batch=16, seq=32, n_devices=8,
     if smoke:
         print("# smoke OK (fused schedules within their overhead caps; "
               "zb-reuse device model <= zb-recompute; mpmd device model "
-              "<= spmd with per-rank buffers below uniform max)")
+              "<= spmd with per-rank buffers below uniform max; route "
+              "latches verified and wire codecs bitwise/tolerance-checked)")
         return rows
 
     # schedule-payoff acceptance: on dedicated devices, interleaving and/or

@@ -12,6 +12,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Tuple
 
+from repro.core.wire import WireSpec
+
 
 # ---------------------------------------------------------------------------
 # Attention / MoE / SSM sub-configs
@@ -250,9 +252,11 @@ class PlanSpec:
     pipe: int
     microbatches: int
     partition: Tuple[int, ...] = ()
+    wire: str = "fp32"            # on-the-wire codec (WireSpec.parse form)
 
     def __post_init__(self):
         object.__setattr__(self, "partition", tuple(self.partition))
+        WireSpec.parse(self.wire)         # rejects malformed wire specs
         if self.pipe < 1:
             raise ValueError(f"need pipe >= 1, got {self.pipe}")
         if self.microbatches < 1:
@@ -271,14 +275,16 @@ class PlanSpec:
     def to_dict(self) -> dict:
         return {"schedule": self.schedule.to_dict(), "pipe": self.pipe,
                 "microbatches": self.microbatches,
-                "partition": list(self.partition)}
+                "partition": list(self.partition),
+                "wire": self.wire}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanSpec":
         return cls(schedule=ScheduleSpec.from_dict(d["schedule"]),
                    pipe=int(d["pipe"]),
                    microbatches=int(d["microbatches"]),
-                   partition=tuple(int(p) for p in d.get("partition", ())))
+                   partition=tuple(int(p) for p in d.get("partition", ())),
+                   wire=d.get("wire", "fp32"))
 
     def apply_to(self, pcfg: "ParallelConfig") -> "ParallelConfig":
         """Project this plan onto a base config (keeps tp/data/remat/...)."""
@@ -286,7 +292,8 @@ class PlanSpec:
                           schedule=self.schedule.name,
                           residuals=self.schedule.residuals,
                           executor=self.schedule.executor,
-                          partition=self.partition)
+                          partition=self.partition,
+                          wire=self.wire)
 
 
 def parse_schedule(schedule: str) -> Tuple[str, int]:
@@ -375,7 +382,14 @@ class ParallelConfig:
     portals: bool = True          # paper C4
     stream_inputs: bool = False   # beyond-paper: shard µbatches over pipe + rotate
     fsdp: bool = True             # ZeRO-3 over the data axis
-    grad_compression: str = "none"  # none | int8_ef (cross-pod)
+    grad_compression: str = "none"  # none | int8_ef (cross-pod): blockwise
+    #   int8 + error feedback on the data-parallel gradient reduce
+    #   (runtime.compression.EFCompressor; EF residual rides OptState.ef).
+    wire: str = "fp32"            # pipeline on-the-wire codec, WireSpec.parse
+    #   form: "fp32" | "bf16" | "int8-ef" uniform, or per payload class
+    #   "chain=bf16,portal=fp32,cotangent=int8-ef".  fp32 is bitwise
+    #   lossless; bf16 halves wire bytes (exact on bf16-cast models);
+    #   int8-ef quantizes with per-(rank, stream) error feedback.
     activation_dtype: str = "bfloat16"
     partition: Tuple[int, ...] = ()  # per-GLOBAL-stage layer counts (length
     #   pipe * virtual_stages, summing to the model's layer count) — the
@@ -395,6 +409,11 @@ class ParallelConfig:
         if self.executor not in EXECUTORS:
             raise ValueError(f"unknown executor {self.executor!r}; "
                              f"want one of {EXECUTORS}")
+        if self.grad_compression not in ("none", "int8_ef"):
+            raise ValueError(
+                f"unknown grad_compression {self.grad_compression!r}; "
+                f"want 'none' or 'int8_ef'")
+        WireSpec.parse(self.wire)                 # rejects malformed specs
         base, v = parse_schedule(self.schedule)   # rejects malformed specs
         object.__setattr__(self, "partition", tuple(self.partition))
         if self.partition:
@@ -447,7 +466,12 @@ class ParallelConfig:
         object the planner searches over and ``PlanReport`` serializes."""
         return PlanSpec(schedule=self.schedule_spec, pipe=self.pipe,
                         microbatches=self.n_micro,
-                        partition=self.partition)
+                        partition=self.partition, wire=self.wire)
+
+    @property
+    def wire_spec(self) -> WireSpec:
+        """This config's on-the-wire codec selection, parsed."""
+        return WireSpec.parse(self.wire)
 
     @property
     def schedule_base(self) -> str:

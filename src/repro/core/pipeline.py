@@ -73,6 +73,7 @@ from repro.core import checkpointing
 from repro.core import plan as plan_lib
 from repro.core.plan import BWD, BWD_W, BWD_X, FWD, NOP, pipe_ring_perm
 from repro.core.skip import SkipSpec
+from repro.runtime.compression import _dequantize_block, _quantize_block
 
 PIPE_AXIS = "pipe"
 
@@ -246,6 +247,109 @@ def _vjp_split(fn, args, also_live=()):
 
 
 # ---------------------------------------------------------------------------
+# On-the-wire codec (plan.TaskPlan.wire): encode at latch, decode at arrival
+# ---------------------------------------------------------------------------
+
+def _float_leaf(p) -> bool:
+    return jnp.issubdtype(jnp.dtype(p.dtype), jnp.floating)
+
+
+class _Codec:
+    """One payload class's wire codec, applied leaf-wise over carry trees.
+
+    ``zeros(proto)`` builds the wire-format register/in-flight value the
+    scan state holds; ``enc(value, ef, pred)`` encodes at the latch (or the
+    SPMD eager send) and — for the stateful ``int8-ef`` codec — folds the
+    quantization residual into the error-feedback state only when ``pred``
+    says the send is real, keeping the EF sequence identical across
+    executors; ``dec(wire, proto)`` reverses it at the arrival tick.
+    Non-float leaves (token ids riding a forward-only carry) always pass
+    through untouched, so every codec is exact on them.  ``fp32`` is a
+    strict identity — wire trees equal value trees bitwise, which is what
+    keeps the default mode bit-for-bit against the pre-codec executor.
+    """
+
+    def __init__(self, codec: str, block: int):
+        self.codec = codec
+        self.block = block
+        self.stateful = codec == "int8-ef"
+
+    def _q_shapes(self, p):
+        n = 1
+        for d in p.shape:
+            n *= int(d)
+        nb = max(-(-n // self.block), 1)
+        return n, nb
+
+    def zeros(self, proto):
+        if self.codec == "fp32":
+            return _zeros_of(proto)
+        leaves, td = jax.tree_util.tree_flatten(proto)
+
+        def one(p):
+            if not _float_leaf(p):
+                return jnp.zeros(tuple(p.shape), jnp.dtype(p.dtype))
+            if self.codec == "bf16":
+                return jnp.zeros(tuple(p.shape), jnp.bfloat16)
+            n, nb = self._q_shapes(p)
+            return {"q": jnp.zeros((nb, self.block), jnp.int8),
+                    "s": jnp.zeros((nb, 1), jnp.float32)}
+        return jax.tree_util.tree_unflatten(td, [one(p) for p in leaves])
+
+    def ef_zeros(self, proto):
+        """Error-feedback residual per float leaf (empty where exact)."""
+        leaves, td = jax.tree_util.tree_flatten(proto)
+        return jax.tree_util.tree_unflatten(
+            td, [jnp.zeros(tuple(p.shape), jnp.float32)
+                 if self.stateful and _float_leaf(p) else ()
+                 for p in leaves])
+
+    def enc(self, value, ef=(), pred=None):
+        """value tree -> (wire tree, new ef tree)."""
+        if self.codec == "fp32":
+            return value, ef
+        if self.codec == "bf16":
+            return jax.tree.map(
+                lambda v: v.astype(jnp.bfloat16) if _float_leaf(v) else v,
+                value), ef
+        leaves, td = jax.tree_util.tree_flatten(value)
+        efs = td.flatten_up_to(ef) if self.stateful else [()] * len(leaves)
+
+        def one(v, e):
+            if not _float_leaf(v):
+                return v, e
+            y = v.astype(jnp.float32) + e
+            flat = y.reshape(-1)
+            q, s = _quantize_block(flat, self.block)
+            deq = _dequantize_block(q, s, flat.shape[0]).reshape(v.shape)
+            resid = y - deq
+            new_e = jnp.where(pred, resid, e) if pred is not None else resid
+            return {"q": q, "s": s}, new_e
+        pairs = [one(v, e) for v, e in zip(leaves, efs)]
+        wire = jax.tree_util.tree_unflatten(td, [w for w, _ in pairs])
+        new_ef = jax.tree_util.tree_unflatten(td, [e for _, e in pairs])
+        return wire, new_ef
+
+    def dec(self, wire, proto):
+        """wire tree -> value tree (dtype/shape of ``proto``)."""
+        if self.codec == "fp32":
+            return wire
+        leaves_p, td = jax.tree_util.tree_flatten(proto)
+        leaves_w = td.flatten_up_to(wire)
+
+        def one(w, p):
+            if not _float_leaf(p):
+                return w
+            if self.codec == "bf16":
+                return w.astype(jnp.dtype(p.dtype))
+            n, _ = self._q_shapes(p)
+            flat = _dequantize_block(w["q"], w["s"], n)
+            return flat.reshape(tuple(p.shape)).astype(jnp.dtype(p.dtype))
+        return jax.tree_util.tree_unflatten(
+            td, [one(w, p) for w, p in zip(leaves_w, leaves_p)])
+
+
+# ---------------------------------------------------------------------------
 # THE schedule executor — the repo's single tick loop
 # ---------------------------------------------------------------------------
 
@@ -354,6 +458,29 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             raise ValueError(f"skip edge {name!r} has no proto")
     streaming = cfg.stream_inputs and R > 1
     k_stream = m // R if streaming else 0
+    mpmd = cfg.executor == "mpmd"
+
+    # on-the-wire codec per payload class (plan.TaskPlan.wire): chain
+    # carries, portal/skip route values, and backward cotangents (chain +
+    # mirrored route cotangents) each pick fp32 | bf16 | int8-ef.
+    wire_spec = tplan.wire
+    cdc_id = _Codec("fp32", wire_spec.block)
+    cdc_chain = _Codec(wire_spec.chain, wire_spec.block)
+    cdc_portal = _Codec(wire_spec.portal, wire_spec.block)
+    cdc_cot = _Codec(wire_spec.cotangent, wire_spec.block)
+    if R == 1:
+        # single-rank pipelines have no chain wire: the "hop" is an
+        # identity hold, never lossified
+        cdc_chain = cdc_cot = cdc_id
+    # route payloads: the codec applies only where the hop actually
+    # crosses a wire (non-empty permute); same-rank holds stay exact
+    rt_vc = {rt.key: (cdc_portal if rt.fwd_perm else cdc_id)
+             for rt in routes}
+    rt_gc = {rt.key: (cdc_cot if rt.bwd_perm else cdc_id)
+             for rt in routes}
+    wire_stateful = (cdc_chain.stateful or cdc_cot.stateful
+                     or any(c.stateful for c in rt_vc.values())
+                     or any(c.stateful for c in rt_gc.values()))
 
     if fb:
         if loss_fn is None:
@@ -381,18 +508,26 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             p_all)
 
     # ---- scan state (identical pytree across all segment scans) -----------
+    # Chain registers and route registers/in-flight values live in WIRE
+    # format (the fp32 codec's wire format IS the value format): MPMD route
+    # payloads latch into "snd"/"gsnd" registers shipped at the top of the
+    # next tick (double-buffered like the chain carry); SPMD keeps the
+    # eager end-of-tick "fly"/"gfly" in-flight slots.
+    route_reg = "snd" if mpmd else "fly"
+    g_route_reg = "gsnd" if mpmd else "gfly"
     st = {
-        "f_chain": _zeros_of(carry0),
+        "f_chain": cdc_chain.zeros(carry0),
         "park": _buf(max(tplan.park_depth, 1), carry0),
         "resident": resident,
         "routes": {rt.key: {"buf": _buf(rt.depth, skip_protos[rt.name]),
-                            "fly": _zeros_of(skip_protos[rt.name])}
+                            route_reg: rt_vc[rt.key].zeros(
+                                skip_protos[rt.name])}
                    for rt in routes},
     }
     if streaming:
         st["stream"] = inputs_mb
     if fb:
-        st["b_chain"] = _zeros_of(carry0)
+        st["b_chain"] = cdc_cot.zeros(carry0)
         st["b_inbox"] = _buf(tplan.b_inbox_depth, carry0)
         st["loss"] = jnp.zeros((), jnp.float32)
         st["g_stage"] = (_buf(m, stage_params) if ordered
@@ -405,8 +540,27 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         for rt in routes:
             st["routes"][rt.key]["gbuf"] = _buf(rt.g_depth,
                                                 skip_protos[rt.name])
-            st["routes"][rt.key]["gfly"] = _zeros_of(skip_protos[rt.name])
-    else:
+            st["routes"][rt.key][g_route_reg] = rt_gc[rt.key].zeros(
+                skip_protos[rt.name])
+    if wire_stateful:
+        # per-(rank, stream) error-feedback state for int8-ef classes; the
+        # residual of each real send folds into the next payload of the
+        # same stream (chain, backward chain, each route's value /
+        # cotangent flow)
+        wef: Dict[str, Any] = {}
+        if cdc_chain.stateful:
+            wef["f"] = cdc_chain.ef_zeros(carry0)
+        if fb and cdc_cot.stateful:
+            wef["b"] = cdc_cot.ef_zeros(carry0)
+        for rt in routes:
+            if rt_vc[rt.key].stateful:
+                wef["r:" + rt.key] = rt_vc[rt.key].ef_zeros(
+                    skip_protos[rt.name])
+            if fb and rt_gc[rt.key].stateful:
+                wef["g:" + rt.key] = rt_gc[rt.key].ef_zeros(
+                    skip_protos[rt.name])
+        st["wef"] = wef
+    if not fb:
         st["outputs"] = _buf(m, carry0)
         # the stream shard's batch dim is also at 1 ([k, mb, ...]), so one
         # constraint covers both input modes before slicing / rotating.
@@ -518,13 +672,13 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
     # permutes, route hops, stream rotation) always stay in the rank-uniform
     # skeleton OUTSIDE that switch: a collective inside a per-rank branch
     # would deadlock a real device group.
-    mpmd = cfg.executor == "mpmd"
     # global ship mask: tick t's skeleton permute carries the latches
     # written at t-1 (MPMD double buffering, see plan.py)
     ship_f_tick = np.zeros(tplan.n_ticks, bool)
     ship_b_tick = np.zeros(tplan.n_ticks, bool)
     ship_f_tick[1:] = (tplan.send_slot[:-1] >= 0).any(axis=1)
     ship_b_tick[1:] = (tplan.b_send_slot[:-1] >= 0).any(axis=1)
+    route_name_of = {rt.key: rt.name for rt in routes}
 
     def make_segment(seg: plan_lib.Segment):
         sl = slice(seg.start, seg.stop)
@@ -546,9 +700,23 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         # need_brecv can never outrun these)
         need_ship_f = mpmd and bool(ship_f_tick[sl].any())
         need_ship_b = mpmd and fb and bool(ship_b_tick[sl].any())
+        # per-route ship masks (MPMD latched routes) and arrival flags —
+        # a route arrival in a segment implies a ship tick in the same
+        # segment (the latch is always exactly one tick earlier)
+        rship = {rt.key: mpmd and bool(rt.ship[sl].any()) for rt in routes}
+        rgship = {rt.key: mpmd and fb and bool(rt.g_ship[sl].any())
+                  for rt in routes}
+        seg_recv = {rt.key: bool((rt.recv[sl] >= 0).any()) for rt in routes}
+        seg_grecv = {rt.key: fb and bool((rt.g_recv[sl] >= 0).any())
+                     for rt in routes}
         if mpmd:
             assert not need_park or need_ship_f
             assert not need_brecv or need_ship_b
+            for rt in routes:
+                assert not seg_recv[rt.key] or rship[rt.key], \
+                    f"route {rt.key}: arrival without a same-segment ship"
+                assert not seg_grecv[rt.key] or rgship[rt.key], \
+                    f"route {rt.key}: g arrival without a same-segment ship"
 
         # per-rank specialization tables (MPMD): rank r's branch set over
         # this segment is EXACTLY the kinds its column contains here
@@ -584,9 +752,13 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             xs["rw"] = jnp.asarray(tplan.resid_write[sl])
         if need_rd:
             xs["rd"] = jnp.asarray(tplan.resid_read[sl])
-        if mpmd and has_f:
+        # "snd"/"bsnd" drive the MPMD latches — and, under a stateful
+        # chain/cotangent codec, the SPMD eager sends' EF gating (the EF
+        # update must key on the same real-send predicate in both
+        # executors to keep them bitwise-identical in lossy modes)
+        if (mpmd or cdc_chain.stateful) and has_f:
             xs["snd"] = jnp.asarray(tplan.send_slot[sl])
-        if mpmd and fb and has_bi:
+        if (mpmd or cdc_cot.stateful) and fb and has_bi:
             xs["bsnd"] = jnp.asarray(tplan.b_send_slot[sl])
         if streaming:
             xs["ssl"] = jnp.asarray(tplan.stream_slot[sl])
@@ -611,7 +783,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
         if rxs and any(rxs.values()):
             xs["routes"] = rxs
 
-        def rank_tick(r, st, xt, arr_f, arr_b):
+        def rank_tick(r, st, xt, arr_f, arr_b, arr_rt, arr_grt):
             """One rank's tick: arrivals -> operands -> task -> commit.
 
             ``r is None`` is the SPMD reference instance: dynamic
@@ -622,8 +794,11 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             all), and buffer writes elided when rank r's columns prove
             them dead.  ``arr_f`` / ``arr_b`` are this tick's chain
             arrivals (SPMD: the value permuted at the end of last tick;
-            MPMD: the latch register shipped at the top of this one).
-            Returns ``(out_state, extras)`` with ``extras`` rank-uniform.
+            MPMD: the latch register shipped at the top of this one);
+            ``arr_rt`` / ``arr_grt`` are the route value / cotangent
+            arrivals keyed by route, already wire-decoded by the
+            skeleton.  Returns ``(out_state, extras)`` with ``extras``
+            rank-uniform.
             """
             static = r is not None
 
@@ -672,17 +847,19 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             for rt in routes:
                 rx = xt.get("routes", {}).get(rt.key, {})
                 rs = st["routes"][rt.key]
-                entry = {"buf": rs["buf"], "fly": rs["fly"]}
+                entry = {"buf": rs["buf"], route_reg: rs[route_reg]}
                 if "recv" in rx:
                     rc = col(rx["recv"])
-                    entry["buf"] = _masked_write(rs["buf"], rs["fly"], rc,
+                    entry["buf"] = _masked_write(rs["buf"],
+                                                 arr_rt[rt.key], rc,
                                                  rc >= 0)
                 if fb:
                     entry["gbuf"] = rs["gbuf"]
-                    entry["gfly"] = rs["gfly"]
+                    entry[g_route_reg] = rs[g_route_reg]
                     if "g_recv" in rx:
                         grc = col(rx["g_recv"])
-                        entry["gbuf"] = _masked_write(rs["gbuf"], rs["gfly"],
+                        entry["gbuf"] = _masked_write(rs["gbuf"],
+                                                      arr_grt[rt.key],
                                                       grc, grc >= 0)
                 rst[rt.key] = entry
             b_inbox = st.get("b_inbox")
@@ -922,6 +1099,7 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
             out = dict(st)
             out["park"] = park
             out["resident"] = res["res"]
+            wef = dict(st["wef"]) if wire_stateful else None
             is_f = sel_t == remap.get(FWD, -1) if r_f else None
             if fb:
                 if r_f:
@@ -965,11 +1143,17 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                                                  micro_t, ig_pred)
                     out["b_inbox"] = b_inbox
                     if r_latch_b:
-                        # MPMD: latch the input cotangent into the send
-                        # register; the NEXT tick's skeleton ships it.
+                        # MPMD: encode + latch the input cotangent into the
+                        # send register; the NEXT tick's skeleton ships it.
                         bsnd = col(xt["bsnd"])
-                        out["b_chain"] = _select(bsnd >= 0, res["b"],
+                        wire_b, ef2 = cdc_cot.enc(
+                            res["b"],
+                            wef["b"] if cdc_cot.stateful else (),
+                            bsnd >= 0)
+                        out["b_chain"] = _select(bsnd >= 0, wire_b,
                                                  st["b_chain"])
+                        if cdc_cot.stateful:
+                            wef["b"] = ef2
                 elif r_brecv:
                     out["b_inbox"] = b_inbox
             else:
@@ -978,18 +1162,63 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                         _masked_write(st["outputs"], res["carry"], micro_t,
                                       is_f & is_last_rank), lead=1)
             if r_latch_f:
-                # MPMD: latch this tick's boundary output for the next
-                # tick's overlapped ship (see plan.TaskPlan.send_slot)
+                # MPMD: encode + latch this tick's boundary output for the
+                # next tick's overlapped ship (see plan.TaskPlan.send_slot)
                 snd = col(xt["snd"])
-                out["f_chain"] = _select(snd >= 0, res["carry"],
-                                         st["f_chain"])
+                wire_f, ef2 = cdc_chain.enc(
+                    res["carry"],
+                    wef["f"] if cdc_chain.stateful else (),
+                    snd >= 0)
+                out["f_chain"] = _select(snd >= 0, wire_f, st["f_chain"])
+                if cdc_chain.stateful:
+                    wef["f"] = ef2
+            if routes and mpmd:
+                # MPMD route latch: encode + park outgoing route payloads in
+                # the per-route send registers at the bottom of the tick; the
+                # next tick's skeleton ships them overlapped with compute —
+                # no route hop ever serializes after its producing task.
+                for rt in routes:
+                    rx = xt.get("routes", {}).get(rt.key, {})
+                    entry = rst[rt.key]
+                    proto = skip_protos[rt.name]
+                    vc, gc = rt_vc[rt.key], rt_gc[rt.key]
+                    if "send" in rx and (
+                            not static
+                            or bool((rt.send[sl, r] != -1).any())):
+                        sv = col(rx["send"])
+                        fresh = (res["skips"][rt.name]
+                                 if (not fb or r_f) else _zeros_of(proto))
+                        raw = _select(sv == plan_lib.SEND_STAGE, fresh,
+                                      _dyn_read(entry["buf"], sv))
+                        ef = wef["r:" + rt.key] if vc.stateful else ()
+                        wire_v, ef2 = vc.enc(raw, ef, sv != -1)
+                        entry["snd"] = _select(
+                            sv != -1, wire_v, st["routes"][rt.key]["snd"])
+                        if vc.stateful:
+                            wef["r:" + rt.key] = ef2
+                    if fb and "g_send" in rx and (
+                            not static
+                            or bool((rt.g_send[sl, r] != -1).any())):
+                        gv = col(rx["g_send"])
+                        gfresh = (res["gskips"][rt.name]
+                                  if r_bi else _zeros_of(proto))
+                        graw = _select(gv == plan_lib.SEND_STAGE, gfresh,
+                                       _dyn_read(entry["gbuf"], gv))
+                        gef = wef["g:" + rt.key] if gc.stateful else ()
+                        wire_g, gef2 = gc.enc(graw, gef, gv != -1)
+                        entry["gsnd"] = _select(
+                            gv != -1, wire_g, st["routes"][rt.key]["gsnd"])
+                        if gc.stateful:
+                            wef["g:" + rt.key] = gef2
             if routes:
                 # fresh dict: never mutate st (the MPMD branches all close
                 # over the same state dict)
                 out["routes"] = {rt.key: rst[rt.key] for rt in routes}
+            if wef is not None:
+                out["wef"] = wef
 
             extras = {}
-            if routes:
+            if routes and not mpmd:
                 extras["skips"] = (res["skips"] if r_f and has_f
                                    else zeros_skips())
                 if fb and has_bi:
@@ -1010,47 +1239,93 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                 # dependency on this tick's compute — XLA's scheduler can
                 # overlap the hop with the stage work below.
                 arr_f = (_shift_chain(st["f_chain"], R, axis, ring=chunked)
-                         if need_ship_f else _zeros_of(carry0))
+                         if need_ship_f else cdc_chain.zeros(carry0))
                 arr_b = None
                 if fb:
                     arr_b = (_shift_chain_rev(st["b_chain"], R, axis,
                                               ring=chunked)
-                             if need_ship_b else _zeros_of(carry0))
-                if cfg.overlap and (need_ship_f or need_ship_b):
+                             if need_ship_b else cdc_cot.zeros(carry0))
+                # latched route hops: ship last tick's send registers at
+                # the top of this tick, same double-buffer story as the
+                # chain carry — no route hop serializes after its producer.
+                arr_rt = {rt.key: _route_hop(st["routes"][rt.key]["snd"],
+                                             rt.fwd_perm, axis)
+                          for rt in routes if rship[rt.key]}
+                arr_grt = {rt.key: _route_hop(st["routes"][rt.key]["gsnd"],
+                                              rt.bwd_perm, axis)
+                           for rt in routes if rgship[rt.key]} if fb else {}
+                if cfg.overlap and (need_ship_f or need_ship_b
+                                    or arr_rt or arr_grt):
                     # pin the overlap: group the in-flight arrivals into
                     # one scheduling unit issued ahead of the compute, so
                     # the compiler cannot sink the send back behind it
                     # (the serialized story cfg.overlap=False ablates to).
                     if fb:
-                        arr_f, arr_b = _barrier(arr_f, arr_b)
+                        arr_f, arr_b, arr_rt, arr_grt = _barrier(
+                            arr_f, arr_b, arr_rt, arr_grt)
                     else:
-                        (arr_f,), = (_barrier(arr_f),)
+                        arr_f, arr_rt = _barrier(arr_f, arr_rt)
+                # decode at arrival (identity for fp32 wire)
+                arr_f = cdc_chain.dec(arr_f, carry0)
+                if fb:
+                    arr_b = cdc_cot.dec(arr_b, carry0)
+                arr_rt = {k: rt_vc[k].dec(v, skip_protos[route_name_of[k]])
+                          for k, v in arr_rt.items()}
+                arr_grt = {k: rt_gc[k].dec(v,
+                                           skip_protos[route_name_of[k]])
+                           for k, v in arr_grt.items()}
             else:
-                arr_f = st["f_chain"]
-                arr_b = st.get("b_chain")
+                arr_f = cdc_chain.dec(st["f_chain"], carry0)
+                arr_b = cdc_cot.dec(st["b_chain"], carry0) if fb else None
+                arr_rt = {rt.key: rt_vc[rt.key].dec(
+                    st["routes"][rt.key]["fly"], skip_protos[rt.name])
+                    for rt in routes if seg_recv[rt.key]}
+                arr_grt = {rt.key: rt_gc[rt.key].dec(
+                    st["routes"][rt.key]["gfly"], skip_protos[rt.name])
+                    for rt in routes if seg_grecv[rt.key]}
 
             # --- per-rank specialized tick ---------------------------------
             if mpmd and R > 1:
                 out, extras = jax.lax.switch(
                     idx, tuple(functools.partial(rank_tick, r)
-                               for r in range(R)), st, xt, arr_f, arr_b)
+                               for r in range(R)), st, xt, arr_f, arr_b,
+                    arr_rt, arr_grt)
             else:
                 out, extras = rank_tick(0 if mpmd else None, st, xt,
-                                        arr_f, arr_b)
+                                        arr_f, arr_b, arr_rt, arr_grt)
 
             # --- rank-uniform comm skeleton, part 2 ------------------------
             # SPMD reference: eager chain sends (this tick's outputs enter
             # the wire immediately, serialized after the compute).
             if not mpmd:
                 if fb and has_bi:
-                    out["b_chain"] = _shift_chain_rev(extras["b"], R, axis,
+                    if cdc_cot.stateful:
+                        bsnd = xt["bsnd"][idx]
+                        wire_b, ef2 = cdc_cot.enc(extras["b"],
+                                                  out["wef"]["b"],
+                                                  bsnd >= 0)
+                        out["wef"] = dict(out["wef"], b=ef2)
+                    else:
+                        wire_b, _ = cdc_cot.enc(extras["b"], (), None)
+                    out["b_chain"] = _shift_chain_rev(wire_b, R, axis,
                                                       ring=chunked)
                 if has_f:
-                    out["f_chain"] = _shift_chain(extras["carry"], R, axis,
+                    if cdc_chain.stateful:
+                        snd = xt["snd"][idx]
+                        wire_f, ef2 = cdc_chain.enc(extras["carry"],
+                                                    out["wef"]["f"],
+                                                    snd >= 0)
+                        out["wef"] = dict(out["wef"], f=ef2)
+                    else:
+                        wire_f, _ = cdc_chain.enc(extras["carry"], (), None)
+                    out["f_chain"] = _shift_chain(wire_f, R, axis,
                                                   ring=chunked)
 
-            # skip-route hops (static single-pair / chain permutes)
-            for rt in routes:
+            # skip-route hops (static single-pair / chain permutes) — SPMD
+            # eager reference: this tick's payload enters the wire
+            # immediately, serialized after the compute.  (MPMD latches
+            # instead; see the commit section + part-1 skeleton.)
+            for rt in (() if mpmd else routes):
                 rx = xt.get("routes", {}).get(rt.key, {})
                 entry = dict(out["routes"][rt.key])
                 if "send" in rx and has_f:
@@ -1058,7 +1333,13 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                     val = _select(sv == plan_lib.SEND_STAGE,
                                   extras["skips"][rt.name],
                                   _dyn_read(entry["buf"], sv))
-                    entry["fly"] = _route_hop(val, rt.fwd_perm, axis)
+                    vc = rt_vc[rt.key]
+                    ef = out["wef"]["r:" + rt.key] if vc.stateful else ()
+                    wire_v, ef2 = vc.enc(val, ef, sv != -1)
+                    if vc.stateful:
+                        out["wef"] = dict(out["wef"],
+                                          **{"r:" + rt.key: ef2})
+                    entry["fly"] = _route_hop(wire_v, rt.fwd_perm, axis)
                 else:
                     entry["fly"] = st["routes"][rt.key]["fly"]
                 if fb:
@@ -1067,7 +1348,15 @@ def run_pipeline_tasks(stage_apply: StageApplyFn,
                         gval = _select(gv == plan_lib.SEND_STAGE,
                                        extras["gskips"][rt.name],
                                        _dyn_read(entry["gbuf"], gv))
-                        entry["gfly"] = _route_hop(gval, rt.bwd_perm, axis)
+                        gc = rt_gc[rt.key]
+                        gef = (out["wef"]["g:" + rt.key]
+                               if gc.stateful else ())
+                        wire_g, gef2 = gc.enc(gval, gef, gv != -1)
+                        if gc.stateful:
+                            out["wef"] = dict(out["wef"],
+                                              **{"g:" + rt.key: gef2})
+                        entry["gfly"] = _route_hop(wire_g, rt.bwd_perm,
+                                                   axis)
                     else:
                         entry["gfly"] = st["routes"][rt.key]["gfly"]
                 out["routes"][rt.key] = entry
@@ -1127,7 +1416,8 @@ def run_pipeline(stage_apply: StageApplyFn,
     last rank.
     """
     tplan = plan_lib.plan_for("gpipe_fwd", cfg.n_micro, cfg.pipe,
-                              skips=skips, portals=cfg.portals)
+                              skips=skips, portals=cfg.portals,
+                              wire=cfg.wire)
     return run_pipeline_tasks(stage_apply, stage_params, inputs_mb, cfg,
                               tplan=tplan, skip_protos=skip_protos,
                               resident=resident, carry_proto=carry_proto,
@@ -1191,7 +1481,8 @@ def pipeline_grad_call(stage_apply: StageApplyFn,
     cfg = cfg.with_(stream_inputs=streaming)
     tplan = plan_lib.plan_for(cfg.schedule, m, n, skips=skips,
                               portals=cfg.portals,
-                              residuals=cfg.residuals)
+                              residuals=cfg.residuals,
+                              wire=cfg.wire)
 
     def inner(rank_arr, params, head_params, inputs_mb, loss_args_mb,
               bdiv=1, psum_axes=()):

@@ -102,6 +102,7 @@ from repro.configs.base import parse_schedule
 from repro.core import schedules
 from repro.core.schedules import Task
 from repro.core.skip import SkipSpec
+from repro.core.wire import WIRE_FP32, WireSpec
 
 NOP, FWD, BWD, BWD_X, BWD_W = 0, 1, 2, 3, 4
 
@@ -184,6 +185,23 @@ class RoutePlan:
     def key(self) -> str:
         return f"{self.name}@{self.dst}"
 
+    # Ship masks for the double-buffered (mpmd) lowering: a payload that
+    # latched on any rank at the bottom of tick t-1 ships at the TOP of
+    # tick t, overlapped with tick t's compute — exactly the chain-carry
+    # discipline of ``send_slot``.  ``ship[t]`` marks the ticks whose top
+    # needs the value hop; ``g_ship`` mirrors it for the cotangent.
+    @property
+    def ship(self) -> np.ndarray:
+        s = np.zeros(self.send.shape[0], bool)
+        s[1:] = (self.send[:-1] != -1).any(axis=1)
+        return s
+
+    @property
+    def g_ship(self) -> np.ndarray:
+        s = np.zeros(self.g_send.shape[0], bool)
+        s[1:] = (self.g_send[:-1] != -1).any(axis=1)
+        return s
+
 
 @dataclass(frozen=True)
 class TaskPlan:
@@ -222,6 +240,9 @@ class TaskPlan:
     resid_read: Optional[np.ndarray] = None    # [T, R] BWD_W <- stash slot
     resid_depth: int = 0               # SPMD residual buffer depth (max/rank)
     per_stage_resid: Tuple[int, ...] = ()      # residual high-water per rank
+    # --- on-the-wire codec (PR 7) -----------------------------------------
+    wire: WireSpec = WIRE_FP32         # per-payload-class encode at latch /
+    #   decode at arrival; fp32 is the bitwise-lossless identity
 
     @property
     def stash_depth(self) -> int:
@@ -544,7 +565,8 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                 ranks: Optional[int] = None,
                 skips: Sequence[SkipSpec] = (), portals: bool = True,
                 forward_only: bool = False,
-                residuals: str = "recompute") -> TaskPlan:
+                residuals: str = "recompute",
+                wire: Optional[WireSpec] = None) -> TaskPlan:
     """Lower a validated task table to the fused executor's event plan.
 
     ``n`` is the number of GLOBAL stages; ``ranks`` (default ``n``) the
@@ -553,11 +575,14 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
     ``{r, r + ranks, ...}``.  ``residuals="reuse"`` additionally allocates
     the Bx->Bw residual-stash slots for split-backward tables (coerced back
     to ``"recompute"`` when the table has no ``Bw`` — there is nothing to
-    reuse across ticks in a fused backward).
+    reuse across ticks in a fused backward).  ``wire`` selects the
+    on-the-wire codec the executor applies at latch/arrival (default: the
+    lossless fp32 identity).
     """
     if residuals not in ("recompute", "reuse"):
         raise ValueError(f"unknown residuals mode {residuals!r}; "
                          "want 'recompute' or 'reuse'")
+    wire = WireSpec.parse(wire) if wire is not None else WIRE_FP32
     R = n if ranks is None else ranks
     if n % R:
         raise ValueError(f"stages ({n}) must tile ranks ({R})")
@@ -695,7 +720,8 @@ def lower_tasks(table: Sequence[Sequence[Task]], m: int, n: int, *,
                     has_backward=not forward_only, routes=routes,
                     residuals=residuals, resid_write=resid_write,
                     resid_read=resid_read, resid_depth=resid_depth,
-                    per_stage_resid=tuple(resid_high))
+                    per_stage_resid=tuple(resid_high),
+                    wire=wire)
 
 
 def schedule_table(schedule: str, m: int, n: int):
@@ -721,7 +747,10 @@ def schedule_bubble(schedule: str, m: int, n: int,
                     *, residuals: str = "recompute",
                     remat: str = "dots",
                     executor: str = "spmd",
-                    comm_cost: float = 0.0) -> float:
+                    comm_cost: float = 0.0,
+                    bwd_comm_cost: Optional[float] = None,
+                    route_edges: Sequence[Tuple[int, int]] = (),
+                    route_comm_cost: Optional[float] = None) -> float:
     """Dedicated-device bubble fraction of the named schedule's table
     (cost-weighted critical-path idle share) — the dry-run cost model's
     pipeline-efficiency term.  ``residuals`` selects the split-backward
@@ -729,7 +758,12 @@ def schedule_bubble(schedule: str, m: int, n: int,
     whose stash is empty and still recomputes); ``comm_cost`` prices one
     chain hop and ``executor`` decides whether it overlaps compute
     (``"mpmd"`` double buffering) or serializes after the producing task
-    (``"spmd"``).  Returns 0 for a single-stage pipeline."""
+    (``"spmd"``).  ``bwd_comm_cost``/``route_comm_cost`` price the
+    cotangent chain and skip-route hops separately (byte-derived wire
+    terms — the codec can shrink each payload class independently;
+    ``None`` = same as ``comm_cost``); ``route_edges`` lists the
+    ``(src_stage, dst_stage)`` skip edges whose hops the model should
+    charge.  Returns 0 for a single-stage pipeline."""
     if n <= 1:
         return 0.0
     table, n_stages, ranks = schedule_table(schedule, m, n)
@@ -737,7 +771,9 @@ def schedule_bubble(schedule: str, m: int, n: int,
         table, ranks,
         schedules.default_task_cost(n_stages, ranks, residuals=residuals,
                                     remat=remat),
-        comm_cost=comm_cost, overlap_comm=executor == "mpmd")
+        comm_cost=comm_cost, overlap_comm=executor == "mpmd",
+        bwd_comm_cost=bwd_comm_cost, route_edges=route_edges,
+        route_comm_cost=route_comm_cost)
 
 
 @dataclass(frozen=True)
@@ -768,6 +804,9 @@ class PlanCost:
 def plan_cost(schedule: str, m: int, n: int, *,
               residuals: str = "recompute", remat: str = "dots",
               executor: str = "spmd", comm_cost: float = 0.0,
+              bwd_comm_cost: Optional[float] = None,
+              route_edges: Sequence[Tuple[int, int]] = (),
+              route_comm_cost: Optional[float] = None,
               stage_weights: Optional[Sequence[float]] = None) -> PlanCost:
     """Score one (schedule, m, n) point: device-model time + exact memory.
 
@@ -776,8 +815,10 @@ def plan_cost(schedule: str, m: int, n: int, *,
     stage forward cost in stage-forward units; ``None`` = the uniform
     ``ranks / n_stages`` share of :func:`schedules.default_task_cost`),
     runs :func:`schedules.simulate_device_times` with the comm/overlap
-    term, and lowers the table once to read the executor's true per-rank
-    buffer high-water marks.
+    terms (``bwd_comm_cost``/``route_edges``/``route_comm_cost`` price
+    the cotangent chain and skip-route wire hops; see
+    :func:`schedule_bubble`), and lowers the table once to read the
+    executor's true per-rank buffer high-water marks.
     """
     table, n_stages, ranks = schedule_table(schedule, m, n)
     if stage_weights is None:
@@ -791,7 +832,9 @@ def plan_cost(schedule: str, m: int, n: int, *,
             stage_weights, residuals=residuals, remat=remat)
     t_end, busy = schedules.simulate_device_times(
         table, ranks, cost_of, comm_cost=comm_cost,
-        overlap_comm=executor == "mpmd")
+        overlap_comm=executor == "mpmd",
+        bwd_comm_cost=bwd_comm_cost, route_edges=route_edges,
+        route_comm_cost=route_comm_cost)
     tplan = plan_for(schedule, m, n, residuals=residuals)
     bubble = 1.0 - sum(busy) / (ranks * t_end) if t_end > 0 else 0.0
 
@@ -813,7 +856,8 @@ def plan_cost(schedule: str, m: int, n: int, *,
 def plan_for(schedule: str, m: int, n: int, *,
              skips: Sequence[SkipSpec] = (),
              portals: bool = True,
-             residuals: str = "recompute") -> TaskPlan:
+             residuals: str = "recompute",
+             wire: Optional[WireSpec] = None) -> TaskPlan:
     """Build + lower the named schedule for ``n`` pipe ranks.
 
     ``"gpipe"``/``"gpipe_tasked"``, ``"1f1b"``, ``"interleaved:v"`` and
@@ -821,12 +865,46 @@ def plan_for(schedule: str, m: int, n: int, *,
     ``"gpipe_fwd"`` produces the forward-only clock-cycle plan (paper
     Algorithm 1) that inference and the autodiff-backward path execute.
     ``residuals="reuse"`` adds the Bx->Bw residual-stash events to
-    split-backward plans (``"zb"``).
+    split-backward plans (``"zb"``); ``wire`` selects the on-the-wire
+    codec (default fp32 identity).
     """
     if parse_schedule(schedule)[0] == "gpipe_fwd":
         table = [list(tick) for tick in schedules.clock_cycles(m, n)]
         return lower_tasks(table, m, n, skips=skips, portals=portals,
-                           forward_only=True)
+                           forward_only=True, wire=wire)
     table, n_stages, ranks = schedule_table(schedule, m, n)
     return lower_tasks(table, m, n_stages, ranks=ranks, skips=skips,
-                       portals=portals, residuals=residuals)
+                       portals=portals, residuals=residuals, wire=wire)
+
+
+def assert_route_overlap(tplan: TaskPlan) -> int:
+    """Plan-level tripwire: no route hop serializes after its producer.
+
+    For every route arrival (value and cotangent) there must be a latch —
+    a non--1 ``send`` entry — one tick EARLIER on the rank the arrival's
+    permute sources from (the rank itself for same-rank identity holds).
+    That is exactly the property the mpmd executor's double buffering
+    relies on to ship route payloads at the top of the arrival tick,
+    overlapped with that tick's compute.  Returns the number of arrivals
+    checked; raises ``AssertionError`` with the offending (route, tick,
+    rank) on violation.
+    """
+    checked = 0
+    for rt in tplan.routes:
+        for tag, arrs, sends, perm in (("value", rt.recv, rt.send,
+                                        rt.fwd_perm),
+                                       ("cotangent", rt.g_recv, rt.g_send,
+                                        rt.bwd_perm)):
+            src_of = {d: s for s, d in perm}
+            for t, r in zip(*np.nonzero(arrs >= 0)):
+                t, r = int(t), int(r)
+                assert t >= 1, \
+                    (f"route {rt.key} {tag} arrival at tick 0 on rank {r} "
+                     f"has no earlier latch tick")
+                src = src_of.get(r, r)
+                assert sends[t - 1, src] != -1, \
+                    (f"route {rt.key} {tag} arrival at tick {t} rank {r} "
+                     f"has no latch at tick {t - 1} on source rank {src} — "
+                     f"the hop would serialize after its producer")
+                checked += 1
+    return checked

@@ -408,30 +408,46 @@ def weighted_task_cost(stage_weights: Sequence[float],
 
 def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
                           cost_of=None, *, comm_cost: float = 0.0,
-                          overlap_comm: bool = False
+                          overlap_comm: bool = False,
+                          bwd_comm_cost: Optional[float] = None,
+                          route_edges: Sequence[Tuple[int, int]] = (),
+                          route_comm_cost: Optional[float] = None,
+                          overlap_routes: Optional[bool] = None
                           ) -> Tuple[float, List[float]]:
     """Event-driven critical path of a table on ``ranks`` DEDICATED devices.
 
     Each rank executes its tasks in table order; a task starts when its
     rank is free AND its cross-stage dependencies (F chain, backward
-    chain, Bw-after-Bx) have finished.  Returns ``(t_end,
-    per_rank_busy)``; the pipeline bubble a device group actually pays is
-    ``1 - sum(busy) / (ranks * t_end)``.
+    chain, Bw-after-Bx, skip-route arrivals) have finished.  Returns
+    ``(t_end, per_rank_busy)``; the pipeline bubble a device group
+    actually pays is ``1 - sum(busy) / (ranks * t_end)``.
 
     ``comm_cost`` prices one cross-RANK boundary hop (chain ``ppermute``)
     in the same stage-forward units as ``cost_of`` (0 = the legacy
     zero-latency clock; co-resident interleaved chunks hop for free).
+    ``bwd_comm_cost`` prices the cotangent chain hop separately (``None``
+    = ``comm_cost``) — with a wire codec the two payload classes can ship
+    at different precisions, so their byte-derived costs differ.
     ``overlap_comm`` selects the executor's comm story:
 
     * ``False`` (SPMD reference): the send is issued at the end of the
       producing task on the compute stream — the producer's rank is
-      BLOCKED for ``comm_cost`` after the task, and the consumer sees
-      ``finish + comm_cost``.
+      BLOCKED for the hop cost after the task, and the consumer sees
+      ``finish + hop``.
     * ``True`` (MPMD double buffering): the send is latched and shipped
       one tick ahead, overlapping the producer's next compute — the
-      consumer still sees ``finish + comm_cost``, but the producer's rank
+      consumer still sees ``finish + hop``, but the producer's rank
       is free immediately.  Pointwise no later than the serialized story,
       so the mpmd model is <= the spmd model for every table.
+
+    ``route_edges`` lists skip/portal ``(src_stage, dst_stage)`` edges:
+    ``F(i, dst)`` additionally waits on ``F(i, src)`` plus
+    ``route_comm_cost`` (``None`` = ``comm_cost``) when the edge crosses
+    ranks, and the mirrored cotangent makes the producer's backward wait
+    on the consumer's.  ``overlap_routes`` (``None`` = follow
+    ``overlap_comm``) decides whether route sends stall the producing
+    rank (eager, serialized after the producer) or ship latched one tick
+    ahead like the chain carry — the PR 7 route double buffering.
 
     This is the schedule-comparison clock for the speed tables: a
     single-host CPU bench timeshares every "device" over the same cores,
@@ -442,62 +458,98 @@ def simulate_device_times(table: Sequence[Sequence[Task]], ranks: int,
     n_stages = max((t.stage for tick in table for t in tick), default=0) + 1
     if cost_of is None:
         cost_of = default_task_cost(n_stages, ranks)
+    bwd_comm_cost = comm_cost if bwd_comm_cost is None else bwd_comm_cost
+    route_comm_cost = comm_cost if route_comm_cost is None \
+        else route_comm_cost
+    overlap_routes = overlap_comm if overlap_routes is None \
+        else overlap_routes
+    route_edges = tuple((int(a), int(b)) for a, b in route_edges)
     split = any(t.kind == "Bx" for tick in table for t in tick)
     bk = "Bx" if split else "B"
     finish: dict = {}
     rank_free = [0.0] * ranks
     busy = [0.0] * ranks
 
-    def hop(a: Task, b_stage: int) -> float:
-        """Comm latency from task ``a``'s stage to ``b_stage``."""
-        if a.stage % ranks == b_stage % ranks:
+    def hop(a_stage: int, b_stage: int, cost: float) -> float:
+        """Comm latency for a stage -> stage payload hop."""
+        if a_stage % ranks == b_stage % ranks:
             return 0.0             # co-resident chunk: no collective hop
-        return comm_cost
+        return cost
 
     for tick in table:
         for task in sorted(tick):
             if task.kind == "R":
                 continue
-            deps: List[Task] = []
+            # (dependency task, wire latency it arrives with)
+            deps: List[Tuple[Task, float]] = []
             if task.kind == "F":
                 if task.stage > 0:
-                    deps.append(Task("F", task.micro, task.stage - 1))
+                    deps.append((Task("F", task.micro, task.stage - 1),
+                                 hop(task.stage - 1, task.stage, comm_cost)))
+                for src, dst in route_edges:
+                    if dst == task.stage:
+                        deps.append((Task("F", task.micro, src),
+                                     hop(src, dst, route_comm_cost)))
             elif task.kind == bk:
                 if task.stage == n_stages - 1:
-                    deps.append(Task("F", task.micro, task.stage))
+                    deps.append((Task("F", task.micro, task.stage), 0.0))
                 else:
-                    deps.append(Task(bk, task.micro, task.stage + 1))
+                    deps.append((Task(bk, task.micro, task.stage + 1),
+                                 hop(task.stage + 1, task.stage,
+                                     bwd_comm_cost)))
+                for src, dst in route_edges:
+                    if src == task.stage:
+                        deps.append((Task(bk, task.micro, dst),
+                                     hop(dst, src, route_comm_cost)))
             elif task.kind == "Bw":
-                deps.append(Task("Bx", task.micro, task.stage))
+                deps.append((Task("Bx", task.micro, task.stage), 0.0))
             r = task.stage % ranks
             start = max([rank_free[r]]
-                        + [finish[d] + hop(d, task.stage) for d in deps])
+                        + [finish[d] + h for d, h in deps])
             c = cost_of(task)
             finish[task] = start + c
             rank_free[r] = start + c
             busy[r] += c
-            if comm_cost and not overlap_comm:
-                # serialized send: the producer's compute stream carries
-                # the hop, blocking the rank until the wire drains.  The
-                # stall counts as bubble (busy stays compute-only), so the
-                # spmd bubble fraction >= the mpmd one and a step-time
-                # estimate dividing by (1 - bubble) moves the right way.
-                ships = (task.kind == "F" and task.stage < n_stages - 1
-                         and (task.stage + 1) % ranks != r) \
-                    or (task.kind in _BWD_CHAIN and task.stage > 0
-                        and (task.stage - 1) % ranks != r)
-                if ships:
+            # serialized sends: the producer's compute stream carries the
+            # hop, blocking the rank until the wire drains.  The stall
+            # counts as bubble (busy stays compute-only), so the spmd
+            # bubble fraction >= the mpmd one and a step-time estimate
+            # dividing by (1 - bubble) moves the right way.
+            if not overlap_comm:
+                if task.kind == "F" and task.stage < n_stages - 1 \
+                        and (task.stage + 1) % ranks != r and comm_cost:
                     rank_free[r] += comm_cost
+                elif task.kind in _BWD_CHAIN and task.stage > 0 \
+                        and (task.stage - 1) % ranks != r and bwd_comm_cost:
+                    rank_free[r] += bwd_comm_cost
+            if not overlap_routes and route_comm_cost:
+                # eager route sends: each outgoing value/cotangent hop
+                # drains on the producer's stream (the pre-PR 7 story)
+                for src, dst in route_edges:
+                    if task.kind == "F" and src == task.stage \
+                            and dst % ranks != r:
+                        rank_free[r] += route_comm_cost
+                    elif task.kind == bk and dst == task.stage \
+                            and src % ranks != r:
+                        rank_free[r] += route_comm_cost
     return max(rank_free, default=0.0), busy
 
 
 def device_bubble_fraction(table: Sequence[Sequence[Task]], ranks: int,
                            cost_of=None, *, comm_cost: float = 0.0,
-                           overlap_comm: bool = False) -> float:
+                           overlap_comm: bool = False,
+                           bwd_comm_cost: Optional[float] = None,
+                           route_edges: Sequence[Tuple[int, int]] = (),
+                           route_comm_cost: Optional[float] = None,
+                           overlap_routes: Optional[bool] = None) -> float:
     """Idle share of the dedicated-device critical path (cost-weighted)."""
     t_end, busy = simulate_device_times(table, ranks, cost_of,
                                         comm_cost=comm_cost,
-                                        overlap_comm=overlap_comm)
+                                        overlap_comm=overlap_comm,
+                                        bwd_comm_cost=bwd_comm_cost,
+                                        route_edges=route_edges,
+                                        route_comm_cost=route_comm_cost,
+                                        overlap_routes=overlap_routes)
     if t_end <= 0:
         return 0.0
     return 1.0 - sum(busy) / (ranks * t_end)

@@ -29,6 +29,8 @@ from repro.compat import set_mesh
 from repro import configs
 from repro.configs.base import SHAPES_BY_NAME, V5E
 from repro.core import plan as plan_lib
+from repro.core import wire as wire_lib
+from repro.runtime.compression import EFCompressor
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as sharding_lib
 from repro.launch import steps
@@ -103,8 +105,10 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     # compute) and overlaps the next tick's compute under the mpmd
     # executor's double buffering, serializes after the producing task
     # under spmd.
-    comm_units = 0.0
+    comm_units = bwd_comm_units = 0.0
     buf_report = {}
+    wire_report = {}
+    wspec = pcfg.wire_spec
     if shape.kind == "train" and pcfg.pipe > 1:
         mbg = shape.global_batch // pcfg.n_micro
         act_bytes = 2 if pcfg.activation_dtype == "bfloat16" else 4
@@ -114,17 +118,29 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         fwd_unit_s = (analysis.model_flops_for(arch, shape) / 3.0
                       / pcfg.n_micro / pcfg.pipe) / V5E.peak_flops_bf16 \
             / max(pcfg.tp * pcfg.data * pcfg.pod, 1)
-        hop_s = carry_bytes / max(pcfg.data * pcfg.pod, 1) / V5E.ici_bw
+        hop_bytes = carry_bytes / max(pcfg.data * pcfg.pod, 1)
+        # the wire codec prices each payload class in actual on-the-wire
+        # bytes — forward carries at the chain precision, mirrored
+        # cotangents at the cotangent precision
+        hop_s = (hop_bytes * wire_lib.bytes_factor(wspec.chain,
+                                                   block=wspec.block)
+                 / V5E.ici_bw)
+        bwd_hop_s = (hop_bytes * wire_lib.bytes_factor(wspec.cotangent,
+                                                       block=wspec.block)
+                     / V5E.ici_bw)
         comm_units = hop_s / fwd_unit_s if fwd_unit_s > 0 else 0.0
+        bwd_comm_units = bwd_hop_s / fwd_unit_s if fwd_unit_s > 0 else 0.0
         tplan = plan_lib.plan_for(pcfg.schedule, pcfg.n_micro, pcfg.pipe,
-                                  residuals=pcfg.residuals)
+                                  residuals=pcfg.residuals, wire=pcfg.wire)
         buf_report = sharding_lib.per_rank_buffer_bytes(tplan, carry_bytes)
+        wire_report = wire_lib.plan_wire_report(tplan, carry_bytes)
     bubble = (plan_lib.schedule_bubble(pcfg.schedule, pcfg.n_micro,
                                        pcfg.pipe,
                                        residuals=pcfg.residuals,
                                        remat=pcfg.remat,
                                        executor=pcfg.executor,
-                                       comm_cost=comm_units)
+                                       comm_cost=comm_units,
+                                       bwd_comm_cost=bwd_comm_units)
               if shape.kind == "train" else 0.0)
     rep = analysis.RooflineReport(
         arch=arch_name, shape=shape_name,
@@ -152,12 +168,25 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         "pcfg": {"pipe": pcfg.pipe, "tp": pcfg.tp, "data": pcfg.data,
                  "pod": pcfg.pod, "n_micro": pcfg.n_micro,
                  "remat": pcfg.remat, "residuals": pcfg.residuals,
-                 "executor": pcfg.executor},
+                 "executor": pcfg.executor, "wire": pcfg.wire,
+                 "grad_compression": pcfg.grad_compression},
         "comm_cost_units": round(comm_units, 4),
+        "bwd_comm_cost_units": round(bwd_comm_units, 4),
         "advisories": list(pcfg.advisories()),
     })
     if buf_report:
         out["tick_buffers"] = buf_report
+    if wire_report:
+        out["wire"] = wire_report
+    if shape.kind == "train" and pcfg.grad_compression == "int8_ef":
+        # sizing from abstract params — no allocation, just the bytes the
+        # cross-pod gradient all-reduce puts on the slow link per replica
+        comp, raw = EFCompressor().payload_bytes(
+            steps.abstract_params(model))
+        out["grad_compression"] = {
+            "mode": "int8_ef", "payload_bytes": comp,
+            "uncompressed_bytes": raw,
+            "ratio": round(comp / max(raw, 1), 4)}
     if verbose:
         print(f"[dryrun] {arch_name}/{shape_name} mesh={out['mesh']} "
               f"pipe={pcfg.pipe} tp={pcfg.tp} m={pcfg.n_micro} "
@@ -184,6 +213,16 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                   f"(uniform-max/rank "
                   f"{buf_report['uniform_max_buffer_bytes_per_rank'] / 2**20:.1f}"
                   f" MiB)")
+        if wire_report:
+            print(f"[dryrun]   wire={wire_report['wire']} "
+                  f"bytes/tick={wire_report['bytes_per_tick']:.0f} "
+                  f"ratio={wire_report['ratio']:.3f}")
+        if "grad_compression" in out:
+            gc = out["grad_compression"]
+            print(f"[dryrun]   grad_compression=int8_ef "
+                  f"payload={gc['payload_bytes']/2**20:.1f}MiB "
+                  f"(raw {gc['uncompressed_bytes']/2**20:.1f}MiB, "
+                  f"ratio {gc['ratio']:.3f})")
         for msg in pcfg.advisories():
             print(f"[dryrun]   ADVISORY: {msg}")
     if keep_hlo:

@@ -41,7 +41,9 @@ def _plan(args) -> None:
         # micro-batches must still shard over the surrounding data axis
         # (e.g. dryrun's production grid) — restrict the enumeration
         ms = microbatch_options(shape.global_batch, hw.ranks, args.dp)
-    report = plan_arch(arch, shape, hw, microbatches=ms)
+    wires = ([w.strip() for w in args.wires.split(";") if w.strip()]
+             if args.wires else None)
+    report = plan_arch(arch, shape, hw, microbatches=ms, wires=wires)
     print(report.format_table(args.top))
     best = report.best
     if best is not None:
@@ -50,6 +52,9 @@ def _plan(args) -> None:
               f"residuals={s.schedule.residuals} "
               f"executor={s.schedule.executor} m={s.microbatches} "
               f"partition={list(s.partition) or 'uniform'}")
+        print(f"[plan] wire: {s.wire} — "
+              f"{best.wire_bytes_per_step / 2**20:.1f} MiB on the wire "
+              f"per step ({best.wire_ratio:.2f}x fp32)")
         print("[plan] apply with: "
               "PlanSpec.from_dict(report['candidates'][0]['spec'])"
               ".apply_to(pcfg)")
@@ -88,6 +93,11 @@ def main():
                     help="planner mode: rows of the ranked table to print")
     ap.add_argument("--smoke", action="store_true",
                     help="planner mode: plan the reduced smoke variant")
+    ap.add_argument("--wires", default="fp32;bf16;int8-ef",
+                    help="planner mode: ';'-separated WireSpec strings the "
+                         "wire-precision search enumerates (each may be a "
+                         "uniform codec or 'chain=...,portal=...,"
+                         "cotangent=...'); empty = hardware.yaml's wire")
     ap.add_argument("--dp", type=int, default=1,
                     help="planner mode: surrounding data-parallel ways the "
                          "micro-batch must shard over (set to the grid's "

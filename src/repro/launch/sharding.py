@@ -207,6 +207,10 @@ def named(tree_specs, mesh: Mesh):
 
 
 def opt_state_specs(pspecs, opt_state_proto):
-    """Mirror parameter specs onto OptState (step is replicated)."""
+    """Mirror parameter specs onto OptState (step is replicated; the EF
+    residual pytree — present when grad_compression="int8_ef" — shards
+    like the moments)."""
     from repro.optim.optimizers import OptState
-    return OptState(step=P(), mu=pspecs, nu=pspecs, master=pspecs)
+    has_ef = len(jax.tree_util.tree_leaves(opt_state_proto.ef)) > 0
+    return OptState(step=P(), mu=pspecs, nu=pspecs, master=pspecs,
+                    ef=pspecs if has_ef else ())

@@ -22,11 +22,31 @@ from repro.core.pipeline import (last_stage_output, microbatch, pipeline_call,
 from repro.launch import sharding
 from repro.models.lm import LMModel
 from repro.optim import optimizers as optim
+from repro.runtime.compression import EFCompressor
 
 
 def _carry_proto(model: LMModel, mbg: int, seq: int):
     return {"h": jax.ShapeDtypeStruct((mbg, seq, model.arch.d_model),
                                       model.dtype)}
+
+
+def _maybe_compress_grads(pcfg: ParallelConfig, grads, opt_state):
+    """int8-EF the DP gradient reduce (grad_compression="int8_ef").
+
+    The quantize/dequantize + residual update runs before the optimizer;
+    under GSPMD the cross-replica mean is implicit in sharding propagation,
+    so ``reduce_fn`` stays identity and the transform prices/ships the int8
+    payload on the slow (cross-pod) link.  Returns the (possibly) rewritten
+    grads plus the new EF residual pytree to store on the OptState.
+    """
+    if pcfg.grad_compression != "int8_ef":
+        return grads, opt_state.ef
+    if not jax.tree_util.tree_leaves(opt_state.ef):
+        raise ValueError(
+            "grad_compression='int8_ef' needs the error-feedback residual "
+            "on the optimizer state: initialize it with "
+            "optim.init(ocfg, params, with_ef=True)")
+    return EFCompressor().compress_reduce(grads, opt_state.ef)
 
 
 def stage_partition(arch: ArchConfig, pcfg: ParallelConfig, *,
@@ -108,7 +128,9 @@ def build_train_step(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
 
     def train_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, new_ef = _maybe_compress_grads(pcfg, grads, opt_state)
         params2, opt2, metrics = optim.apply(ocfg, opt_state, params, grads)
+        opt2 = opt2._replace(ef=new_ef)
         metrics["loss"] = loss
         return params2, opt2, metrics
 
@@ -152,7 +174,9 @@ def _build_train_step_fused(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
         (g_embed,) = embed_vjp(unmicrobatch(ig))
         g_embed = jax.tree.map(jnp.add, g_embed, g_head["embed"])
         grads = {"embed": g_embed, "stages": g_stage, "head": g_head["head"]}
+        grads, new_ef = _maybe_compress_grads(pcfg, grads, opt_state)
         params2, opt2, metrics = optim.apply(ocfg, opt_state, params, grads)
+        opt2 = opt2._replace(ef=new_ef)
         metrics["loss"] = loss
         return params2, opt2, metrics
 
@@ -240,7 +264,8 @@ def build_cell(model: LMModel, pcfg: ParallelConfig, mesh: Mesh,
     if shape.kind == "train":
         step = build_train_step(model, pcfg, mesh, shape, ocfg)
         opt_p = jax.eval_shape(
-            functools.partial(optim.init, ocfg or optim.OptimizerConfig()),
+            functools.partial(optim.init, ocfg or optim.OptimizerConfig(),
+                              with_ef=pcfg.grad_compression == "int8_ef"),
             params_p)
         ospecs = sharding.opt_state_specs(pspecs, opt_p)
         oshard = sharding.named(ospecs, mesh)

@@ -76,7 +76,10 @@ def main():
             print(f"[train] restored checkpoint")
             return restored
         params = model.init(jax.random.PRNGKey(0))
-        return {"params": params, "opt": optim.init(ocfg, params)}
+        return {"params": params,
+                "opt": optim.init(
+                    ocfg, params,
+                    with_ef=pcfg.grad_compression == "int8_ef")}
 
     log_every = max(1, args.steps // 20)
 

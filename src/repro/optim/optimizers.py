@@ -22,6 +22,7 @@ class OptState(NamedTuple):
     mu: Any          # first moment (fp32), pytree like params
     nu: Any          # second moment (fp32) — zeros pytree for sgd
     master: Any      # fp32 master copy of params
+    ef: Any = ()     # int8-EF gradient-compression residuals (or ())
 
 
 @dataclass(frozen=True)
@@ -62,13 +63,17 @@ def clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: g * scale, grads), gn
 
 
-def init(cfg: OptimizerConfig, params) -> OptState:
+def init(cfg: OptimizerConfig, params, *, with_ef: bool = False) -> OptState:
+    """``with_ef`` allocates the error-feedback residual pytree for int8-EF
+    gradient compression (ParallelConfig.grad_compression="int8_ef"); it
+    mirrors the params leaf-for-leaf so it shards like the moments."""
     f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
     master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
     return OptState(step=jnp.zeros((), jnp.int32),
                     mu=jax.tree.map(f32, params),
                     nu=jax.tree.map(f32, params),
-                    master=master)
+                    master=master,
+                    ef=jax.tree.map(f32, params) if with_ef else ())
 
 
 def apply(cfg: OptimizerConfig, state: OptState, params, grads
@@ -107,5 +112,6 @@ def apply(cfg: OptimizerConfig, state: OptState, params, grads
 
     new_params = jax.tree.map(lambda p, p32: p32.astype(p.dtype),
                               params, master)
-    new_state = OptState(step=step, mu=mu, nu=nu, master=master)
+    new_state = OptState(step=step, mu=mu, nu=nu, master=master,
+                         ef=state.ef)
     return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -14,9 +14,16 @@ through dict/JSON for the PlanReport, and loads from a small YAML file:
     ici_bytes_per_s: 5.0e10          # per-link interconnect bandwidth
     param_overhead: 3.0              # grads + adam moments, x param bytes
     resid_bytes_factor: 1.0          # residual slot bytes / carry bytes
+    link_bandwidth_bytes_per_s: 5.0e10  # pipeline wire link bw (0 = ici)
+    wire: fp32                       # default on-the-wire codec
 
-PyYAML is optional: a flat ``key: value`` fallback parser handles the
-schema above when the import is unavailable.
+``link_bandwidth_bytes_per_s`` prices the pipeline's inter-stage wire
+traffic (chain carries, portal values, cotangents) — it defaults to the
+ICI figure but can be set lower when stage boundaries cross a slower
+fabric (e.g. DCN between pods).  ``wire`` is the default
+``WireSpec.parse`` string the planner starts its wire-precision search
+from.  PyYAML is optional: a flat ``key: value`` fallback parser handles
+the schema above when the import is unavailable.
 """
 from __future__ import annotations
 
@@ -40,6 +47,12 @@ class HardwareSpec:
     # residual-stash slot bytes as a fraction of one carry's bytes
     # (ZB-H1 reuse stores boundary-sized residuals per Bx slot).
     resid_bytes_factor: float = 1.0
+    # pipeline wire link bandwidth for the bytes-priced comm term; the 0.0
+    # sentinel falls back to ici_bytes_per_s (see ``link_bw``).
+    link_bandwidth_bytes_per_s: float = 0.0
+    # default on-the-wire codec (WireSpec.parse string) the wire-precision
+    # search starts from.
+    wire: str = "fp32"
 
     def __post_init__(self):
         if self.ranks < 1:
@@ -48,6 +61,16 @@ class HardwareSpec:
                 or self.ici_bytes_per_s <= 0:
             raise ValueError("memory_bytes, flops, ici_bytes_per_s must be "
                              "positive")
+        if self.link_bandwidth_bytes_per_s < 0:
+            raise ValueError("link_bandwidth_bytes_per_s must be >= 0 "
+                             "(0 = use ici_bytes_per_s)")
+        from repro.core.wire import WireSpec
+        WireSpec.parse(self.wire)         # rejects malformed wire strings
+
+    @property
+    def link_bw(self) -> float:
+        """Effective pipeline wire bandwidth (bytes/s)."""
+        return self.link_bandwidth_bytes_per_s or self.ici_bytes_per_s
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -60,7 +83,7 @@ class HardwareSpec:
             raise ValueError(f"unknown hardware.yaml keys: {sorted(unknown)}; "
                              f"known: {sorted(known)}")
         return cls(**{k: (int(v) if k == "ranks" else
-                          str(v) if k == "name" else float(v))
+                          str(v) if k in ("name", "wire") else float(v))
                       for k, v in d.items()})
 
     @classmethod

@@ -27,6 +27,8 @@ class PlanCandidate:
     mem_budget: float            # hardware.memory_bytes the plan was held to
     feasible: bool
     notes: str = ""
+    wire_bytes_per_step: float = 0.0   # on-the-wire bytes, encoded
+    wire_ratio: float = 1.0            # encoded / fp32 wire bytes
 
     @property
     def peak_mem_bytes(self) -> int:
@@ -43,6 +45,8 @@ class PlanCandidate:
             "mem_budget": self.mem_budget,
             "feasible": self.feasible,
             "notes": self.notes,
+            "wire_bytes_per_step": self.wire_bytes_per_step,
+            "wire_ratio": self.wire_ratio,
         }
 
     @classmethod
@@ -55,7 +59,10 @@ class PlanCandidate:
                    mem_bytes=tuple(int(b) for b in d["mem_bytes"]),
                    mem_budget=float(d["mem_budget"]),
                    feasible=bool(d["feasible"]),
-                   notes=str(d.get("notes", "")))
+                   notes=str(d.get("notes", "")),
+                   wire_bytes_per_step=float(
+                       d.get("wire_bytes_per_step", 0.0)),
+                   wire_ratio=float(d.get("wire_ratio", 1.0)))
 
 
 @dataclass
@@ -114,19 +121,22 @@ class PlanReport:
                f"(ranks={self.hardware.get('ranks', '?')}, "
                f"mem/rank={float(self.hardware.get('memory_bytes', 0)) / 2**30:.1f} GiB)")
         cols = (f"{'#':>2} {'schedule':<14} {'m':>3} {'resid':<9} "
-                f"{'exec':<4} {'partition':<18} {'t[units]':>9} "
-                f"{'t[ms]':>9} {'bubble':>6} {'mem[GiB]':>8} {'ok':>3}")
+                f"{'exec':<4} {'wire':<8} {'partition':<14} {'t[units]':>9} "
+                f"{'t[ms]':>9} {'bubble':>6} {'wire[MiB]':>9} "
+                f"{'mem[GiB]':>8} {'ok':>3}")
         lines = [hdr, cols, "-" * len(cols)]
         for i, c in enumerate(self.top(k)):
             s = c.spec
             part = ",".join(str(p) for p in s.partition) or "uniform"
-            if len(part) > 18:
-                part = part[:15] + "..."
+            if len(part) > 14:
+                part = part[:11] + "..."
+            wire = s.wire if len(s.wire) <= 8 else "mixed"
             lines.append(
                 f"{i + 1:>2} {s.schedule.name:<14} {s.microbatches:>3} "
                 f"{s.schedule.residuals:<9} {s.schedule.executor:<4} "
-                f"{part:<18} {c.step_units:>9.2f} "
+                f"{wire:<8} {part:<14} {c.step_units:>9.2f} "
                 f"{c.step_s * 1e3:>9.3f} {c.bubble:>6.3f} "
+                f"{c.wire_bytes_per_step / 2**20:>9.1f} "
                 f"{c.peak_mem_bytes / 2**30:>8.2f} "
                 f"{'yes' if c.feasible else 'NO':>3}")
         if self.best is None:

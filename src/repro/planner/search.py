@@ -33,6 +33,7 @@ from repro.configs.base import (ArchConfig, ParallelConfig, PlanSpec,
                                 ScheduleSpec, ShapeConfig)
 from repro.core import balance
 from repro.core import plan as plan_lib
+from repro.core import wire as wire_lib
 from repro.core.stage import partition_layout
 from repro.planner.hardware import HardwareSpec
 from repro.planner.report import PlanCandidate, PlanReport
@@ -167,13 +168,23 @@ def score_candidate(profile: ModelProfile, hw: HardwareSpec, spec: PlanSpec,
     # stage-forward UNIT: 1/ranks of the model's per-micro forward compute
     unit_s = (profile.total_flops * mb / pipe) / hw.flops
     weights = [f * mb / hw.flops / unit_s for f in stage_flops]
-    hop_s = carry_bytes / hw.ici_bytes_per_s
-    comm_units = hop_s / unit_s if unit_s > 0 else 0.0
+    # bytes-priced comm terms: each payload class crosses the roofline
+    # link at its own wire precision (the codec knob the search turns)
+    wspec = wire_lib.WireSpec.parse(spec.wire)
+    comm_units = wire_lib.hop_comm_units(
+        carry_bytes, wspec.chain, hw.link_bw, unit_s, block=wspec.block)
+    bwd_comm_units = wire_lib.hop_comm_units(
+        carry_bytes, wspec.cotangent, hw.link_bw, unit_s, block=wspec.block)
 
     cost = plan_lib.plan_cost(
         sched.name, m, pipe, residuals=sched.residuals, remat=remat,
         executor=sched.executor, comm_cost=comm_units,
+        bwd_comm_cost=bwd_comm_units,
         stage_weights=weights)
+    wire_rep = wire_lib.plan_wire_report(
+        plan_lib.plan_for(sched.name, m, pipe, residuals=sched.residuals,
+                          wire=spec.wire),
+        carry_bytes)
 
     # per-rank memory: hosted params (+grads/opt) + tick-loop carry slots
     # + residual stash.  Rank r hosts chunks {r, r + pipe, ...}.
@@ -191,47 +202,58 @@ def score_candidate(profile: ModelProfile, hw: HardwareSpec, spec: PlanSpec,
         spec=spec, step_units=cost.t_end, step_s=cost.t_end * unit_s,
         bubble=cost.bubble, comm_units=comm_units,
         mem_bytes=tuple(mem), mem_budget=float(hw.memory_bytes),
-        feasible=feasible)
+        feasible=feasible,
+        wire_bytes_per_step=float(wire_rep["bytes_per_step"]),
+        wire_ratio=float(wire_rep["ratio"]))
 
 
 def plan_profile(profile: ModelProfile, hw: HardwareSpec, *,
                  base: Optional[ParallelConfig] = None,
                  shape_name: str = "",
                  microbatches: Optional[Sequence[int]] = None,
-                 executors: Sequence[str] = ("spmd", "mpmd")) -> PlanReport:
+                 executors: Sequence[str] = ("spmd", "mpmd"),
+                 wires: Optional[Sequence[str]] = None) -> PlanReport:
     """Search the full candidate space for one profiled model.
 
     ``executors`` restricts the executor leg of the search (e.g.
     ``("spmd",)`` on hosts where per-rank specialized compilation is not
-    worth it).
+    worth it).  ``wires`` enumerates the on-the-wire codec knob
+    (WireSpec.parse strings); the default searches only the hardware
+    spec's declared codec, so ``ParallelConfig.auto``-style callers keep
+    the lossless (bitwise) default unless the hardware file or the caller
+    opts into precision trades.
     """
     pipe = base.pipe if base is not None else hw.ranks
     remat = base.remat if base is not None else "dots"
     dp = base.data * base.pod * base.dp2 if base is not None else 1
     ms = list(microbatches) if microbatches is not None else \
         microbatch_options(profile.global_batch, pipe, dp)
+    ws = list(wires) if wires is not None else [hw.wire]
     report = PlanReport(model=profile.name, shape=shape_name,
                         hardware=hw.to_dict())
     for sched in _schedule_specs(pipe, profile.n_layers, executors):
         n_stages = pipe * sched.virtual_stages
         for partition in _partition_options(profile, n_stages):
             for m in ms:
-                spec = PlanSpec(schedule=sched, pipe=pipe, microbatches=m,
-                                partition=partition)
-                try:
-                    report.candidates.append(
-                        score_candidate(profile, hw, spec, remat=remat))
-                except ValueError:
-                    # schedule constraint (e.g. interleaved needs m % pipe
-                    # == 0): not a plan, not an error
-                    continue
+                for w in ws:
+                    spec = PlanSpec(schedule=sched, pipe=pipe,
+                                    microbatches=m, partition=partition,
+                                    wire=w)
+                    try:
+                        report.candidates.append(
+                            score_candidate(profile, hw, spec, remat=remat))
+                    except ValueError:
+                        # schedule constraint (e.g. interleaved needs m %
+                        # pipe == 0): not a plan, not an error
+                        continue
     return report
 
 
 def plan_arch(arch, shape, hardware: Optional[HardwareSpec] = None, *,
               base: Optional[ParallelConfig] = None,
               microbatches: Optional[Sequence[int]] = None,
-              executors: Sequence[str] = ("spmd", "mpmd")) -> PlanReport:
+              executors: Sequence[str] = ("spmd", "mpmd"),
+              wires: Optional[Sequence[str]] = None) -> PlanReport:
     """Plan a registered arch (by name or ArchConfig) on a hardware spec."""
     from repro import configs
     if isinstance(arch, str):
@@ -242,4 +264,5 @@ def plan_arch(arch, shape, hardware: Optional[HardwareSpec] = None, *,
     hw = hardware or HardwareSpec()
     profile = profile_arch(arch, shape)
     return plan_profile(profile, hw, base=base, shape_name=shape.name,
-                        microbatches=microbatches, executors=executors)
+                        microbatches=microbatches, executors=executors,
+                        wires=wires)

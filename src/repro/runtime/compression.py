@@ -68,16 +68,32 @@ class EFCompressor:
             new_e = gf - deq                      # residual kept locally
             return reduce_fn(deq), new_e
 
-        out = jax.tree.map(one, grads, ef)
-        flat, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x:
-                                                   isinstance(x, tuple))
-        red = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
-        new_ef = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+        # Explicit two-tree flatten/unflatten: flattening the (deq, ef)
+        # pair tree with ``is_leaf=isinstance(x, tuple)`` would stop at any
+        # tuple NODE a grad pytree legitimately contains and silently
+        # mis-split it; the grads treedef pins the leaf positions instead.
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(ef)
+        pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        red = jax.tree_util.tree_unflatten(treedef, [r for r, _ in pairs])
+        new_ef = jax.tree_util.tree_unflatten(treedef, [e for _, e in pairs])
         return red, new_ef
 
     def payload_bytes(self, grads: Any) -> Tuple[int, int]:
-        """(compressed, uncompressed) cross-link bytes per replica."""
-        raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
-        comp = sum(g.size + 4 * (-(-g.size // self.block))
-                   for g in jax.tree.leaves(grads))
+        """(compressed, uncompressed) cross-link bytes per replica.
+
+        Accepts concrete arrays or abstract leaves (ShapeDtypeStruct — the
+        dryrun path sizes the payload from ``jax.eval_shape`` params).
+        """
+        def n_of(g):
+            size = getattr(g, "size", None)
+            if size is None:
+                size = 1
+                for d in g.shape:
+                    size *= int(d)
+            return int(size)
+
+        sizes = [n_of(g) for g in jax.tree.leaves(grads)]
+        raw = sum(n * 4 for n in sizes)
+        comp = sum(n + 4 * (-(-n // self.block)) for n in sizes)
         return comp, raw
